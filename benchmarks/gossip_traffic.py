@@ -1,0 +1,50 @@
+"""Traffic/slot accounting for the compiled gossip plans — the paper's
+structural claims (redundancy removal, bounded concurrency) at TPU scale,
+plus analytic bytes-on-wire for every gossip mode at each arch's size."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.core.graph import Graph, TopologySpec, build_mst, color_graph, make_topology
+from repro.core.schedule import compile_dissemination, compile_flooding, compile_tree_allreduce
+
+
+class _FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def run(csv_rows):
+    t0 = time.time()
+    # structural claims across topologies and N
+    for kind in ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert"):
+        for n in (10, 16, 32):
+            g = make_topology(TopologySpec(kind=kind, n=n, seed=1))
+            mst = build_mst(g)
+            colors = color_graph(mst)
+            diss = compile_dissemination(mst, colors)
+            tree = compile_tree_allreduce(mst, colors)
+            flood = compile_flooding(g)
+            us = (time.time() - t0) * 1e6
+            csv_rows.append((
+                f"gossip_plan/{kind}/n{n}", us,
+                f"diss_tx{diss.total_transmissions()}_flood_tx"
+                f"{flood.total_transmissions()}_tree_tx{tree.total_transmissions()}"
+                f"_slots{diss.n_slots}",
+            ))
+
+    # per-arch bytes on the wire for one communication round (32-node mesh)
+    from repro.dfl.collectives import GossipPlan, gossip_collective_bytes
+
+    mesh = _FakeMesh(pod=2, data=16, model=16)
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        plan = GossipPlan.build(mesh, cfg.node_axes)
+        pbytes = cfg.param_count() * 2  # bf16
+        us = (time.time() - t0) * 1e6
+        for mode in ("dissemination", "tree_allreduce", "flooding", "allreduce_ref"):
+            gb = gossip_collective_bytes(mode, plan, pbytes) / 2**30
+            csv_rows.append((f"gossip_bytes/{arch}/{mode}", us, f"{gb:.1f}GiB"))

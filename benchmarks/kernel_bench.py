@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: wall time per call (interpret-mode on CPU — the
+numbers calibrate the harness, not TPU perf) plus the analytic FLOPs/bytes
+each call would execute on the TPU target."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.flash import flash_attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.mixing.gossip_mix import gossip_mix
+from repro.kernels.mixing.ref import gossip_mix_ref
+from repro.kernels.scan.mamba_scan import mamba_selective_scan
+from repro.kernels.scan.ref import selective_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def run(csv_rows):
+    # flash attention: kernel (interpret) vs jnp oracle
+    b, s, h, hd = 1, 512, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    flops = 4 * b * s * s * h * hd  # qk^T + pv
+    us = _time(lambda a, b_, c: flash_attention(a, b_, c, interpret=True), q, k, v)
+    csv_rows.append(("kernel/flash_attention_interp", us, f"{flops/1e9:.2f}GF"))
+    us = _time(jax.jit(attention_ref), q, k, v)
+    csv_rows.append(("kernel/flash_attention_xla_ref", us, f"{flops/1e9:.2f}GF"))
+
+    # selective scan
+    b, s, di, n = 1, 128, 128, 16
+    ks = jax.random.split(KEY, 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, di)))
+    Bm = jax.random.normal(ks[1], (b, s, n))
+    Cm = jax.random.normal(ks[2], (b, s, n))
+    x = jax.random.normal(ks[3], (b, s, di))
+    A_log = jnp.zeros((di, n))
+    D = jnp.zeros((di,))
+    sflops = b * s * di * n * 6
+    us = _time(lambda *a: mamba_selective_scan(*a, block_d=64, chunk=32,
+                                               interpret=True),
+               dt, Bm, Cm, x, A_log, D)
+    csv_rows.append(("kernel/mamba_scan_interp", us, f"{sflops/1e6:.2f}MF"))
+    us = _time(jax.jit(selective_scan_ref), dt, Bm, Cm, x, A_log, D)
+    csv_rows.append(("kernel/mamba_scan_xla_ref", us, f"{sflops/1e6:.2f}MF"))
+
+    # gossip mix
+    buf = jax.random.normal(KEY, (16, 500_000))
+    w = jnp.full(16, 1 / 16)
+    mbytes = buf.size * 4
+    us = _time(lambda a, b_: gossip_mix(a, b_, interpret=True), buf, w)
+    csv_rows.append(("kernel/gossip_mix_interp", us, f"{mbytes/2**20:.1f}MiB"))
+    us = _time(jax.jit(gossip_mix_ref), buf, w)
+    csv_rows.append(("kernel/gossip_mix_xla_ref", us, f"{mbytes/2**20:.1f}MiB"))

@@ -1,0 +1,83 @@
+"""Reproduce the paper's Tables III/IV/V on the testbed simulator.
+
+One benchmark per table: bandwidth (MB/s), single-transfer time (s), and
+total communication-round time (s), for broadcast vs MOSGU across the four
+topologies and the seven CNN payloads.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.configs.paper_payloads import PAPER_PAYLOADS
+from repro.core.netsim import TestbedSpec, compare_protocols
+
+TOPOLOGIES = ("erdos_renyi", "watts_strogatz", "barabasi_albert", "complete")
+CODES = ("v3s", "v2", "b0", "v3l", "b1", "b2", "b3")
+
+# Paper values for side-by-side comparison (broadcast is one merged column).
+PAPER_BROADCAST = {  # code -> (bandwidth MB/s, transfer s, total s)
+    "v3s": (1.785, 6.500, 10.0), "v2": (1.096, 12.773, 24.0),
+    "b0": (1.011, 20.970, 30.0), "v3l": (1.066, 20.255, 30.0),
+    "b1": (0.842, 37.060, 55.0), "b2": (0.839, 42.864, 61.0),
+    "b3": (0.767, 62.576, 83.0),
+}
+PAPER_MOSGU_BW = {  # (topology, code) -> MB/s (Table III)
+    ("erdos_renyi", "v3s"): 5.353, ("erdos_renyi", "b3"): 6.022,
+    ("watts_strogatz", "v3s"): 4.640, ("watts_strogatz", "b3"): 6.146,
+    ("barabasi_albert", "v3s"): 3.969, ("barabasi_albert", "b3"): 5.522,
+    ("complete", "v3s"): 4.349, ("complete", "b3"): 4.610,
+}
+
+
+def simulate_all(seed: int = 3) -> Dict:
+    spec = TestbedSpec()
+    out = {}
+    for topo in TOPOLOGIES:
+        for code in CODES:
+            mb = PAPER_PAYLOADS[code].capacity_mb
+            out[(topo, code)] = compare_protocols(topo, mb, seed=seed, spec=spec)
+    return out
+
+
+def run(csv_rows) -> Dict:
+    t0 = time.time()
+    results = simulate_all()
+    us = (time.time() - t0) * 1e6 / len(results)
+
+    gains, speeds = [], []
+    for (topo, code), r in sorted(results.items()):
+        b, m = r["broadcast"], r["mosgu"]
+        gain = m.mean_bandwidth_mbps / b.mean_bandwidth_mbps
+        speed = b.total_time_s / m.total_time_s
+        gains.append(gain)
+        speeds.append(speed)
+        csv_rows.append((f"table3_bandwidth/{topo}/{code}", us,
+                         f"{m.mean_bandwidth_mbps:.3f}MBps_gain{gain:.2f}x"))
+        csv_rows.append((f"table4_transfer/{topo}/{code}", us,
+                         f"{m.mean_transfer_s:.3f}s_vs_bcast{b.mean_transfer_s:.1f}s"))
+        csv_rows.append((f"table5_round/{topo}/{code}", us,
+                         f"{m.total_time_s:.2f}s_speedup{speed:.2f}x"))
+    csv_rows.append(("table3_bandwidth/max_gain", us, f"{max(gains):.2f}x_paper8.01x"))
+    csv_rows.append(("table5_round/max_speedup", us, f"{max(speeds):.2f}x_paper4.38x"))
+    return results
+
+
+def markdown_tables(results) -> str:
+    lines = []
+    for title, metric in [
+        ("Table III — bandwidth (MB/s)", "mean_bandwidth_mbps"),
+        ("Table IV — single transfer time (s)", "mean_transfer_s"),
+        ("Table V — total round time (s)", "total_time_s"),
+    ]:
+        lines.append(f"\n### {title}\n")
+        lines.append("| topology | " + " | ".join(CODES) + " | broadcast (ours / paper, b3) |")
+        lines.append("|" + "---|" * (len(CODES) + 2))
+        for topo in TOPOLOGIES:
+            vals = [f"{getattr(results[(topo, c)]['mosgu'], metric):.2f}" for c in CODES]
+            b = getattr(results[(topo, "b3")]["broadcast"], metric)
+            paper_b = {"mean_bandwidth_mbps": 0.767, "mean_transfer_s": 62.576,
+                       "total_time_s": 83.0}[metric]
+            lines.append(f"| {topo} | " + " | ".join(vals) +
+                         f" | {b:.2f} / {paper_b} |")
+    return "\n".join(lines)

@@ -1,0 +1,63 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_results(root: str = "experiments/dryrun") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(root, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(csv_rows):
+    t0 = time.time()
+    for r in load_results():
+        us = (time.time() - t0) * 1e6
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            csv_rows.append((tag, us, r["status"]))
+            continue
+        csv_rows.append((
+            tag, us,
+            f"{r['bottleneck']}_c{r['compute_s']*1e3:.1f}ms"
+            f"_m{r['memory_s']*1e3:.1f}ms_x{r['collective_s']*1e3:.1f}ms"
+            f"_peak{r['peak_memory_gb']:.1f}GB",
+        ))
+
+
+def markdown_table(root: str = "experiments/dryrun") -> str:
+    rows = load_results(root)
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+    archs = sorted({r["arch"] for r in rows})
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| bottleneck | peak GiB | useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                r = by_key.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                                 f"{r['status']} | — | — |")
+                    continue
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} "
+                    f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+                    f"| {r['collective_s']*1e3:.2f} | **{r['bottleneck']}** "
+                    f"| {r['peak_memory_gb']:.2f} "
+                    f"| {min(r['useful_flops_ratio'], 99):.2f} |"
+                )
+    return "\n".join(lines)

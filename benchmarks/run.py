@@ -1,0 +1,27 @@
+"""Benchmark driver — one section per paper table / system report.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    csv_rows = []
+    from . import (coloring_compare, gossip_traffic, kernel_bench,
+                   paper_tables, roofline_report, train_bench)
+
+    print("name,us_per_call,derived")
+    paper_tables.run(csv_rows)
+    coloring_compare.run(csv_rows)
+    gossip_traffic.run(csv_rows)
+    kernel_bench.run(csv_rows)
+    train_bench.run(csv_rows)
+    roofline_report.run(csv_rows)
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving: prefill a batch of prompts, then greedy decode — the
+decode_32k/long_500k dry-run shapes exercised for real on CPU with a reduced
+gemma2 (alternating local/global attention + ring-buffer local caches).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import Batch, build_model
+
+
+def main():
+    cfg = get_arch("gemma2-2b").smoke_variant()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, prompt_len, gen = 8, 24, 24
+    cache_len = 256
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, prompt_len), 0, cfg.vocab)
+
+    print(f"serving gemma2 (reduced): batch={b}, local window="
+          f"{cfg.sliding_window}, cache={cache_len}")
+    decode = jax.jit(model.decode_step)
+    cache = model.init_cache(b, cache_len)
+    tok = prompts[:, :1]
+    generated = []
+    t0 = time.time()
+    for t in range(prompt_len + gen - 1):
+        logits, cache = decode(params, tok, jnp.full((b,), t, jnp.int32), cache)
+        if t + 1 < prompt_len:
+            tok = prompts[:, t + 1 : t + 2]  # teacher-forced prompt replay
+        else:
+            tok = jnp.argmax(logits[:, -1:, : cfg.vocab], -1).astype(jnp.int32)
+            generated.append(tok)
+    dt = time.time() - t0
+    out = np.asarray(jnp.concatenate(generated, axis=1))
+    steps = prompt_len + gen - 1
+    print(f"{steps} decode steps in {dt:.2f}s -> {b*steps/dt:.0f} tok/s "
+          f"({1e3*dt/steps:.1f} ms/step)")
+    print("sample generations (token ids):")
+    for i in range(3):
+        print(f"  seq{i}: {out[i][:12]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpoint import (  # noqa: F401
+    load_metadata, node_checkpoint_path, restore_pytree, save_pytree,
+)

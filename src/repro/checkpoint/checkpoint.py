@@ -1,0 +1,66 @@
+"""Checkpointing: flat-keypath .npz pytree save/restore + DFL round metadata.
+
+Per-node DFL checkpoints carry (node_id, round, step) so a rejoining silo can
+resume and re-enter the gossip at the right round (paper III-D retransmission
+semantics live in the queue engine; persistence lives here).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any, metadata: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if metadata is not None:
+        with open(_meta_path(path), "w") as f:
+            json.dump(metadata, f)
+
+
+def restore_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype checked)."""
+    f = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_elems
+        )
+        arr = f[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"checkpoint shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> Optional[Dict[str, Any]]:
+    mp = _meta_path(path)
+    if not os.path.exists(mp):
+        return None
+    with open(mp) as f:
+        return json.load(f)
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def node_checkpoint_path(root: str, node_id: int, round_idx: int) -> str:
+    return os.path.join(root, f"node{node_id:04d}", f"round{round_idx:08d}.npz")

@@ -1,0 +1,11 @@
+"""Config registry: 10 assigned architectures + the paper's payload table."""
+from .base import (  # noqa: F401
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    get_arch,
+    input_specs,
+    list_archs,
+    register,
+)
+from .paper_payloads import PAPER_PAYLOADS, PayloadModel  # noqa: F401

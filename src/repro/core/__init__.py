@@ -1,0 +1,27 @@
+"""Core MOSGU library: graphs, schedules, gossip, moderator, network sim."""
+from .graph import (  # noqa: F401
+    Graph,
+    TopologySpec,
+    build_mst,
+    color_graph,
+    is_proper_coloring,
+    make_topology,
+    mst_boruvka,
+    mst_kruskal,
+    mst_prim,
+    slot_length_for_colors,
+    slot_length_s,
+)
+from .gossip import GossipEngine, GossipNode, QueueEntry, fedavg_numpy  # noqa: F401
+from .moderator import ConnectivityReport, Moderator, SchedulePacket  # noqa: F401
+from .protocol import MOSGUConfig, MOSGUProtocol  # noqa: F401
+from .schedule import (  # noqa: F401
+    PermStep,
+    Slot,
+    SlotPlan,
+    compile_dissemination,
+    compile_flooding,
+    compile_tree_allreduce,
+    decompose_matchings,
+    plan_to_perm_steps,
+)

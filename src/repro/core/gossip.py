@@ -1,0 +1,192 @@
+"""Runtime gossip engine — the paper's GU step with live FIFO queues.
+
+This is the *dynamic* counterpart of the compiled plans in
+:mod:`repro.core.schedule`: nodes hold real FIFO queues of
+``(owner, round, payload)`` tuples and the engine advances slot by slot,
+supporting the behaviours the static compiler cannot express:
+
+* transient link failures with retransmission in the node's next turn
+  (paper III-D: "if the network temporarily disrupts during transmission,
+  the model will be kept in F and retransmitted"),
+* nodes joining/leaving between rounds (handled upstream by the moderator,
+  which recompiles MST/colors),
+* arbitrary payloads (numpy arrays, pytrees, byte strings).
+
+Equivalence with the compiled dissemination plan (no failures) is enforced
+by tests — the queue traces must match slot for slot.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .graph import Graph
+
+
+@dataclass
+class QueueEntry:
+    owner: int
+    round_idx: int
+    payload: Any = None
+    predecessor: int = -1  # node we received it from; -1 = locally produced
+
+
+@dataclass
+class GossipNode:
+    """One DFL participant: a FIFO queue F plus a store of received models."""
+
+    node_id: int
+    neighbors: List[int]
+    fifo: List[QueueEntry] = field(default_factory=list)
+    received: Dict[int, QueueEntry] = field(default_factory=dict)
+
+    @property
+    def degree(self) -> int:
+        return len(self.neighbors)
+
+    def produce(self, round_idx: int, payload: Any = None) -> None:
+        """Enqueue the locally trained model for this round."""
+        entry = QueueEntry(self.node_id, round_idx, payload, predecessor=-1)
+        self.received[self.node_id] = entry
+        if self.neighbors:
+            self.fifo.append(entry)
+
+    def deliver(self, entry: QueueEntry, from_node: int) -> bool:
+        """Receive a model from a neighbour. Returns True if it was new."""
+        if entry.owner in self.received:
+            return False
+        stored = QueueEntry(entry.owner, entry.round_idx, entry.payload, from_node)
+        self.received[entry.owner] = stored
+        # Degree-1 nodes never forward received models back (paper III-D).
+        if self.degree > 1:
+            self.fifo.append(stored)
+        return True
+
+    def queue_owners(self) -> List[int]:
+        return [e.owner for e in self.fifo]
+
+
+@dataclass
+class SlotReport:
+    slot_idx: int
+    color: int
+    sends: List[Tuple[int, int, int]]  # (src, dst, owner)
+    dropped: List[Tuple[int, int, int]]  # failed transfers (kept in F)
+
+
+class GossipEngine:
+    """Slot-synchronous executor of the MOSGU gossip over an MST.
+
+    ``drop_fn(slot_idx, src, dst)`` may return True to simulate a transient
+    link failure; the entry then stays at the *head* of the sender's FIFO and
+    is retransmitted on the node's next active slot.
+    """
+
+    def __init__(
+        self,
+        mst: Graph,
+        colors: np.ndarray,
+        first_color: int = 0,
+        drop_fn: Optional[Callable[[int, int, int], bool]] = None,
+    ) -> None:
+        if not mst.is_connected():
+            raise ValueError("gossip requires a connected MST")
+        self.mst = mst
+        self.colors = np.asarray(colors)
+        self.nodes = [GossipNode(u, mst.neighbors(u)) for u in range(mst.n)]
+        self.drop_fn = drop_fn
+        self.slot_idx = 0
+        cycle = sorted(set(int(c) for c in self.colors))
+        if first_color in cycle:
+            i0 = cycle.index(first_color)
+            cycle = cycle[i0:] + cycle[:i0]
+        self.color_cycle = cycle
+        self.reports: List[SlotReport] = []
+
+    @property
+    def n(self) -> int:
+        return self.mst.n
+
+    # -- round lifecycle ----------------------------------------------------
+    def begin_round(self, round_idx: int, payloads: Optional[Sequence[Any]] = None) -> None:
+        for u, node in enumerate(self.nodes):
+            node.fifo.clear()
+            node.received.clear()
+            node.produce(round_idx, payloads[u] if payloads is not None else None)
+
+    def step(self) -> SlotReport:
+        """Advance one colored slot."""
+        color = self.color_cycle[self.slot_idx % len(self.color_cycle)]
+        report = SlotReport(self.slot_idx, color, [], [])
+        deliveries: List[Tuple[int, QueueEntry, int]] = []  # (dst, entry, src)
+        for node in self.nodes:
+            if int(self.colors[node.node_id]) != color or not node.fifo:
+                continue
+            entry = node.fifo[0]
+            targets = [v for v in node.neighbors if v != entry.predecessor]
+            dropped_any = False
+            for v in targets:
+                if self.drop_fn is not None and self.drop_fn(self.slot_idx, node.node_id, v):
+                    report.dropped.append((node.node_id, v, entry.owner))
+                    dropped_any = True
+                else:
+                    deliveries.append((v, entry, node.node_id))
+                    report.sends.append((node.node_id, v, entry.owner))
+            # Paper III-D: remove once transmitted; keep in F on disruption.
+            if not dropped_any:
+                node.fifo.pop(0)
+        for dst, entry, src in deliveries:
+            self.nodes[dst].deliver(entry, src)
+        self.slot_idx += 1
+        self.reports.append(report)
+        return report
+
+    def run_round(
+        self, round_idx: int, payloads: Optional[Sequence[Any]] = None, max_slots: int = 100_000
+    ) -> int:
+        """Run slots until full dissemination; return number of slots used."""
+        self.begin_round(round_idx, payloads)
+        start = self.slot_idx
+        while not self.is_round_complete():
+            if self.slot_idx - start >= max_slots:
+                raise RuntimeError("gossip round did not converge")
+            self.step()
+        return self.slot_idx - start
+
+    def is_round_complete(self) -> bool:
+        return all(len(nd.received) == self.n for nd in self.nodes) and all(
+            not nd.fifo for nd in self.nodes
+        )
+
+    # -- inspection ---------------------------------------------------------
+    def queue_snapshot(self) -> List[List[int]]:
+        return [nd.queue_owners() for nd in self.nodes]
+
+    def received_snapshot(self) -> List[Set[int]]:
+        return [set(nd.received.keys()) for nd in self.nodes]
+
+    def aggregate(self, combine: Callable[[List[Any]], Any]) -> List[Any]:
+        """Per-node aggregation over all received payloads (e.g. FedAvg)."""
+        out = []
+        for nd in self.nodes:
+            payloads = [nd.received[o].payload for o in sorted(nd.received)]
+            out.append(combine(payloads))
+        return out
+
+
+def fedavg_numpy(payloads: List[Any]) -> Any:
+    """Uniform FedAvg over numpy pytrees (nested dict/list of arrays)."""
+    def avg(*xs):
+        return sum(xs) / len(xs)
+
+    def tree_map(fn, *trees):
+        t0 = trees[0]
+        if isinstance(t0, dict):
+            return {k: tree_map(fn, *[t[k] for t in trees]) for k in t0}
+        if isinstance(t0, (list, tuple)):
+            return type(t0)(tree_map(fn, *parts) for parts in zip(*trees))
+        return fn(*trees)
+
+    return tree_map(avg, *payloads)

@@ -1,0 +1,478 @@
+"""Graph substrate for MOSGU: adjacency matrices, MSTs, colorings, slot lengths.
+
+This module is pure Python/NumPy (no JAX) — it runs on the *moderator* and its
+outputs (MST edges, colors, slot plans) are static inputs to the compiled
+communication schedules in :mod:`repro.dfl.collectives`.
+
+Terminology follows the paper (Section III):
+  * the network is an undirected weighted graph; weights are communication
+    costs (ping latency in ms, geographic distance, or hop count),
+  * the moderator averages the two directed cost reports per edge,
+  * the MST removes redundant edges (III-B), BFS 2-colors it (III-C),
+  * nodes sharing a color transmit in the same time slot.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Edge = Tuple[int, int]
+
+
+# ---------------------------------------------------------------------------
+# Graph container
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Graph:
+    """Undirected weighted graph backed by a dense adjacency matrix.
+
+    ``adj[i, j] > 0`` means an edge of that cost; ``0`` means no edge.
+    (Costs are latencies/distances, hence strictly positive for real links.)
+    """
+
+    adj: np.ndarray
+
+    def __post_init__(self) -> None:
+        adj = np.asarray(self.adj, dtype=np.float64)
+        if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+            raise ValueError(f"adjacency must be square, got {adj.shape}")
+        if not np.allclose(adj, adj.T):
+            # The paper: cost reports may differ per direction; the moderator
+            # symmetrizes by averaging the two reports.
+            adj = (adj + adj.T) / 2.0
+        np.fill_diagonal(adj, 0.0)
+        if (adj < 0).any():
+            raise ValueError("edge costs must be non-negative")
+        self.adj = adj
+
+    # -- basic queries ------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.adj.shape[0]
+
+    def edges(self) -> List[Tuple[int, int, float]]:
+        """All undirected edges as (u, v, cost), u < v."""
+        iu = np.triu_indices(self.n, k=1)
+        out = []
+        for u, v in zip(*iu):
+            c = self.adj[u, v]
+            if c > 0:
+                out.append((int(u), int(v), float(c)))
+        return out
+
+    def neighbors(self, u: int) -> List[int]:
+        return [int(v) for v in np.nonzero(self.adj[u])[0]]
+
+    def degree(self, u: int) -> int:
+        return int((self.adj[u] > 0).sum())
+
+    def is_connected(self) -> bool:
+        if self.n == 0:
+            return True
+        seen = {0}
+        stack = [0]
+        while stack:
+            u = stack.pop()
+            for v in self.neighbors(u):
+                if v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+        return len(seen) == self.n
+
+    def total_cost(self) -> float:
+        return float(np.triu(self.adj, k=1).sum())
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_edges(cls, n: int, edges: Iterable[Tuple[int, int, float]]) -> "Graph":
+        adj = np.zeros((n, n))
+        for u, v, c in edges:
+            adj[u, v] = adj[v, u] = c
+        return cls(adj)
+
+    @classmethod
+    def from_cost_reports(
+        cls, n: int, reports: Dict[int, Dict[int, float]]
+    ) -> "Graph":
+        """Build from per-node directed cost reports (moderator view).
+
+        ``reports[u][v]`` is node u's measured cost to v. The moderator
+        averages the two directions when both are present (paper III-A).
+        """
+        adj = np.zeros((n, n))
+        for u, costs in reports.items():
+            for v, c in costs.items():
+                if u == v:
+                    continue
+                if adj[v, u] > 0:  # other direction already reported
+                    adj[u, v] = adj[v, u] = (adj[v, u] + c) / 2.0
+                else:
+                    adj[u, v] = adj[v, u] = c
+        return cls(adj)
+
+
+# ---------------------------------------------------------------------------
+# MST algorithms (paper III-B considers Prim / Kruskal / Borůvka; picks Prim)
+# ---------------------------------------------------------------------------
+
+
+def mst_prim(g: Graph, root: int = 0) -> Graph:
+    """Prim's algorithm, O(E + V log V) with a binary heap.
+
+    Chosen by the paper for dense/complete graphs (III-B).
+    """
+    n = g.n
+    if n == 0:
+        return Graph(np.zeros((0, 0)))
+    if not g.is_connected():
+        raise ValueError("MST requires a connected graph")
+    in_tree = np.zeros(n, dtype=bool)
+    in_tree[root] = True
+    edges_out: List[Tuple[int, int, float]] = []
+    heap: List[Tuple[float, int, int]] = []
+    for v in g.neighbors(root):
+        heapq.heappush(heap, (g.adj[root, v], root, v))
+    while heap and len(edges_out) < n - 1:
+        c, u, v = heapq.heappop(heap)
+        if in_tree[v]:
+            continue
+        in_tree[v] = True
+        edges_out.append((u, v, c))
+        for w in g.neighbors(v):
+            if not in_tree[w]:
+                heapq.heappush(heap, (g.adj[v, w], v, w))
+    return Graph.from_edges(n, edges_out)
+
+
+def mst_kruskal(g: Graph) -> Graph:
+    """Kruskal's algorithm, O(E log E) — efficient for sparse graphs."""
+    n = g.n
+    if not g.is_connected():
+        raise ValueError("MST requires a connected graph")
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    out = []
+    for u, v, c in sorted(g.edges(), key=lambda e: e[2]):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[ru] = rv
+            out.append((u, v, c))
+            if len(out) == n - 1:
+                break
+    return Graph.from_edges(n, out)
+
+
+def mst_boruvka(g: Graph) -> Graph:
+    """Borůvka's algorithm, O(E log V)."""
+    n = g.n
+    if not g.is_connected():
+        raise ValueError("MST requires a connected graph")
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    edges = g.edges()
+    out: List[Tuple[int, int, float]] = []
+    n_comp = n
+    while n_comp > 1:
+        cheapest: Dict[int, Tuple[float, int, int]] = {}
+        for u, v, c in edges:
+            ru, rv = find(u), find(v)
+            if ru == rv:
+                continue
+            # tie-break deterministically by (cost, u, v)
+            key = (c, u, v)
+            if ru not in cheapest or key < cheapest[ru]:
+                cheapest[ru] = key
+            if rv not in cheapest or key < cheapest[rv]:
+                cheapest[rv] = key
+        if not cheapest:
+            break
+        for c, u, v in cheapest.values():
+            ru, rv = find(u), find(v)
+            if ru != rv:
+                parent[ru] = rv
+                out.append((u, v, c))
+                n_comp -= 1
+    return Graph.from_edges(n, out)
+
+
+MST_ALGORITHMS = {"prim": mst_prim, "kruskal": mst_kruskal, "boruvka": mst_boruvka}
+
+
+def build_mst(g: Graph, algorithm: str = "prim", root: int = 0) -> Graph:
+    if algorithm == "prim":
+        return mst_prim(g, root)
+    try:
+        return MST_ALGORITHMS[algorithm](g)
+    except KeyError:
+        raise ValueError(f"unknown MST algorithm {algorithm!r}") from None
+
+
+# ---------------------------------------------------------------------------
+# Coloring algorithms (paper III-C considers BFS / DSatur / Welsh-Powell /
+# LDF; picks BFS — a tree is always 2-chromatic so BFS is optimal there)
+# ---------------------------------------------------------------------------
+
+
+def color_bfs(g: Graph, root: int = 0) -> np.ndarray:
+    """BFS coloring, O(V+E). On a tree this yields exactly 2 colors.
+
+    On a general (non-bipartite) graph BFS-layer parity is not a proper
+    coloring, so we greedily repair conflicts — MOSGU only ever colors MSTs,
+    where no repair is needed.
+    """
+    n = g.n
+    colors = -np.ones(n, dtype=np.int64)
+    for start in range(n):
+        if colors[start] >= 0:
+            continue
+        r = root if (start == 0 and colors[root] < 0) else start
+        colors[r] = 0
+        dq = deque([r])
+        while dq:
+            u = dq.popleft()
+            for v in g.neighbors(u):
+                if colors[v] < 0:
+                    colors[v] = 1 - colors[u] if colors[u] in (0, 1) else 0
+                    dq.append(v)
+    # conflict repair for non-bipartite inputs
+    for u in range(n):
+        used = {int(colors[v]) for v in g.neighbors(u)}
+        if int(colors[u]) in used:
+            c = 0
+            while c in used:
+                c += 1
+            colors[u] = c
+    return colors
+
+
+def color_dsatur(g: Graph) -> np.ndarray:
+    """DSatur: pick the vertex with highest saturation degree first."""
+    n = g.n
+    colors = -np.ones(n, dtype=np.int64)
+    sat: List[set] = [set() for _ in range(n)]
+    degs = [g.degree(u) for u in range(n)]
+    for _ in range(n):
+        # max (saturation, degree) among uncolored
+        best, best_key = -1, (-1, -1)
+        for u in range(n):
+            if colors[u] >= 0:
+                continue
+            key = (len(sat[u]), degs[u])
+            if key > best_key:
+                best, best_key = u, key
+        c = 0
+        while c in sat[best]:
+            c += 1
+        colors[best] = c
+        for v in g.neighbors(best):
+            sat[v].add(c)
+    return colors
+
+
+def color_welsh_powell(g: Graph) -> np.ndarray:
+    """Welsh-Powell: color vertices in decreasing-degree order."""
+    n = g.n
+    colors = -np.ones(n, dtype=np.int64)
+    order = sorted(range(n), key=lambda u: -g.degree(u))
+    for u in order:
+        used = {int(colors[v]) for v in g.neighbors(u) if colors[v] >= 0}
+        c = 0
+        while c in used:
+            c += 1
+        colors[u] = c
+    return colors
+
+
+def color_ldf(g: Graph) -> np.ndarray:
+    """Largest Degree First greedy coloring (paper's 'LDF')."""
+    return color_welsh_powell(g)  # LDF == Welsh-Powell's ordering rule
+
+
+COLORING_ALGORITHMS = {
+    "bfs": color_bfs,
+    "dsatur": color_dsatur,
+    "welsh_powell": color_welsh_powell,
+    "ldf": color_ldf,
+}
+
+
+def color_graph(g: Graph, algorithm: str = "bfs", root: int = 0) -> np.ndarray:
+    if algorithm == "bfs":
+        return color_bfs(g, root)
+    try:
+        return COLORING_ALGORITHMS[algorithm](g)
+    except KeyError:
+        raise ValueError(f"unknown coloring algorithm {algorithm!r}") from None
+
+
+def is_proper_coloring(g: Graph, colors: np.ndarray) -> bool:
+    for u, v, _ in g.edges():
+        if colors[u] == colors[v]:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Slot length (paper III-C)
+# ---------------------------------------------------------------------------
+
+
+def slot_length_s(
+    ping_max_ms: float, model_size_mb: float, ping_size_bytes: float
+) -> float:
+    """Paper formula: slot = ping_max × M_size × 1000 / ping_size  (seconds).
+
+    ping_max in milliseconds, model size in MB, ping payload in bytes.
+    Intuition: the ping measured `ping_size` bytes taking `ping_max` ms, so a
+    `M_size` MB payload takes ping_max(ms) × (M_size·1e6 / ping_size) ≈
+    ping_max × M_size × 1000 / ping_size seconds (ms→s absorbs a factor 1e3).
+    """
+    if ping_size_bytes <= 0:
+        raise ValueError("ping payload size must be positive")
+    return ping_max_ms * model_size_mb * 1000.0 / ping_size_bytes
+
+
+def slot_length_for_colors(
+    g: Graph,
+    colors: np.ndarray,
+    model_size_mb: float,
+    ping_size_bytes: float = 64.0,
+) -> float:
+    """Moderator's slot computation: max ping among same-colored senders.
+
+    For each node, its max ping to neighbours; then the max of those values
+    over nodes sharing a color (the slot must cover the slowest same-slot
+    transfer).
+    """
+    per_node_max = np.zeros(g.n)
+    for u in range(g.n):
+        ns = g.neighbors(u)
+        per_node_max[u] = max((g.adj[u, v] for v in ns), default=0.0)
+    ping_max = 0.0
+    for c in np.unique(colors):
+        grp = per_node_max[colors == c]
+        if grp.size:
+            ping_max = max(ping_max, float(grp.max()))
+    return slot_length_s(ping_max, model_size_mb, ping_size_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Topology generators (paper IV-B: complete, Erdős–Rényi, Watts–Strogatz,
+# Barabási–Albert). Deterministic given a seed; costs model the paper's
+# testbed: 3 router subnets, cheap intra-subnet links, expensive inter-subnet.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TopologySpec:
+    kind: str  # complete | erdos_renyi | watts_strogatz | barabasi_albert
+    n: int = 10
+    seed: int = 0
+    p: float = 0.45  # ER edge prob
+    k: int = 4  # WS ring degree
+    beta: float = 0.3  # WS rewire prob
+    m: int = 2  # BA attachment count
+    n_subnets: int = 3
+    intra_cost_ms: Tuple[float, float] = (0.4, 1.5)  # local-link ping range
+    inter_cost_ms: Tuple[float, float] = (8.0, 40.0)  # router-hop ping range
+
+
+def _subnet_of(node: int, n: int, n_subnets: int) -> int:
+    return node * n_subnets // n
+
+
+def _edge_cost(u: int, v: int, spec: TopologySpec, rng: np.random.Generator) -> float:
+    same = _subnet_of(u, spec.n, spec.n_subnets) == _subnet_of(v, spec.n, spec.n_subnets)
+    lo, hi = spec.intra_cost_ms if same else spec.inter_cost_ms
+    return float(rng.uniform(lo, hi))
+
+
+def make_topology(spec: TopologySpec) -> Graph:
+    """Generate a connected topology with subnet-aware costs."""
+    rng = np.random.default_rng(spec.seed)
+    n = spec.n
+    edges: set = set()
+
+    def add(u: int, v: int) -> None:
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+
+    if spec.kind == "complete":
+        for u in range(n):
+            for v in range(u + 1, n):
+                add(u, v)
+    elif spec.kind == "erdos_renyi":
+        for u in range(n):
+            for v in range(u + 1, n):
+                if rng.uniform() < spec.p:
+                    add(u, v)
+    elif spec.kind == "watts_strogatz":
+        k = max(2, spec.k - spec.k % 2)
+        for u in range(n):
+            for j in range(1, k // 2 + 1):
+                add(u, (u + j) % n)
+        # rewire
+        ring = sorted(edges)
+        for (u, v) in ring:
+            if rng.uniform() < spec.beta:
+                w = int(rng.integers(0, n))
+                if w != u and (min(u, w), max(u, w)) not in edges:
+                    edges.discard((u, v))
+                    add(u, w)
+    elif spec.kind == "barabasi_albert":
+        m = spec.m
+        targets = list(range(m + 1))
+        for u, v in [(i, j) for i in range(m + 1) for j in range(i + 1, m + 1)]:
+            add(u, v)
+        repeated: List[int] = []
+        for u, v in list(edges):
+            repeated += [u, v]
+        for u in range(m + 1, n):
+            chosen: set = set()
+            while len(chosen) < m:
+                pick = repeated[int(rng.integers(0, len(repeated)))]
+                chosen.add(pick)
+            for v in chosen:
+                add(u, v)
+                repeated += [u, v]
+            repeated += [u] * m
+    else:
+        raise ValueError(f"unknown topology kind {spec.kind!r}")
+
+    # ensure connectivity: link consecutive components through cheapest stub
+    g = Graph.from_edges(n, [(u, v, 1.0) for u, v in edges])
+    while not g.is_connected():
+        seen = {0}
+        stack = [0]
+        while stack:
+            x = stack.pop()
+            for y in g.neighbors(x):
+                if y not in seen:
+                    seen.add(y)
+                    stack.append(y)
+        outside = [u for u in range(n) if u not in seen]
+        add(min(seen), outside[0])
+        g = Graph.from_edges(n, [(u, v, 1.0) for u, v in edges])
+
+    return Graph.from_edges(n, [(u, v, _edge_cost(u, v, spec, rng)) for u, v in edges])
+
+
+TOPOLOGY_KINDS = ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert")

@@ -1,0 +1,328 @@
+"""Event-driven testbed simulator reproducing the paper's evaluation setup.
+
+The paper measures on 10 physical devices behind 3 routers (Fig. 3): every
+transfer traverses the sender's access link, the inter-router trunk when the
+endpoints live in different subnets, and the receiver's access link.
+Concurrent transfers *share* link capacity — which is precisely why naive
+flooding collapses: every node transmitting to every neighbour at once
+divides each link's bandwidth by the number of simultaneous flows, while the
+MST+coloring schedule keeps concurrency (and hence contention) low.
+
+We reproduce that mechanism with a deterministic fluid-flow simulation:
+at any instant each flow's rate is ``min`` over its traversed links of the
+link's fair share (capacity / flows on link); the simulation advances to the
+next flow completion, re-solving rates each time.
+
+Metrics match the paper's three tables:
+  * bandwidth (MB/s): mean per-transfer achieved rate         (Table III)
+  * single transfer time (s): mean flow duration              (Table IV)
+  * total round time (s): wall time for full dissemination    (Table V)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import Graph, TopologySpec, _subnet_of, build_mst, color_graph, make_topology
+from .schedule import SlotPlan, compile_dissemination, compile_flooding
+
+LinkId = Tuple[str, int, int]  # ("access-up"/"access-down", node, -1) or ("trunk", r1, r2)
+
+
+@dataclass
+class TestbedSpec:
+    """Physical underlay: N devices across `n_subnets` routers."""
+
+    n: int = 10
+    n_subnets: int = 3
+    access_mbps: float = 12.0  # device<->router capacity, MB/s
+    trunk_mbps: float = 30.0  # router<->router capacity, MB/s
+    base_latency_s: float = 0.15  # per-transfer protocol overhead (FTP setup)
+    hop_latency_s: float = 0.35  # extra latency per router hop
+    per_flow_cap_mbps: float = 11.0  # single-flow application ceiling (FTP/disk)
+    # Goodput collapse under contention (paper I: packet loss -> retransmission
+    # -> queuing delays): with k flows on a link, usable capacity shrinks by
+    # 1/(1 + collapse_gamma * max(0, k - collapse_k0)).
+    collapse_gamma: float = 0.05
+    collapse_k0: int = 3
+    # Collapse compounds over sustained congestion episodes; longer transfers
+    # (bigger models) suffer more loss/retransmission, so the effective gamma
+    # scales with sqrt(model_size / collapse_ref_mb) (paper Table III trend).
+    collapse_ref_mb: float = 30.0
+
+    def subnet(self, node: int) -> int:
+        return _subnet_of(node, self.n, self.n_subnets)
+
+    def links_for(self, src: int, dst: int) -> List[LinkId]:
+        s, d = self.subnet(src), self.subnet(dst)
+        links: List[LinkId] = [("access-up", src, -1)]
+        if s != d:
+            links.append(("trunk", min(s, d), max(s, d)))
+        links.append(("access-down", dst, -1))
+        return links
+
+    def capacity(self, link: LinkId) -> float:
+        return self.trunk_mbps if link[0] == "trunk" else self.access_mbps
+
+    def latency(self, src: int, dst: int) -> float:
+        hops = 0 if self.subnet(src) == self.subnet(dst) else 2
+        return self.base_latency_s + hops * self.hop_latency_s
+
+
+@dataclass
+class _Flow:
+    src: int
+    dst: int
+    owner: int
+    remaining_mb: float
+    links: List[LinkId]
+    start: float
+    latency_left: float  # setup latency before bytes move
+    done_at: Optional[float] = None
+
+
+@dataclass
+class SimResult:
+    total_time_s: float
+    mean_transfer_s: float
+    mean_bandwidth_mbps: float
+    n_transfers: int
+    max_concurrency: int
+    per_transfer_s: List[float] = field(default_factory=list)
+
+
+class FluidSimulator:
+    """Max-min-ish fair-share fluid flow simulator over the testbed links."""
+
+    def __init__(self, spec: TestbedSpec, congestion_scale: float = 1.0) -> None:
+        self.spec = spec
+        self.congestion_scale = congestion_scale
+        self.t = 0.0
+        self.flows: List[_Flow] = []
+        self.finished: List[_Flow] = []
+        self.max_concurrency = 0
+
+    def add_flow(self, src: int, dst: int, owner: int, size_mb: float) -> None:
+        self.flows.append(
+            _Flow(
+                src,
+                dst,
+                owner,
+                size_mb,
+                self.spec.links_for(src, dst),
+                self.t,
+                self.spec.latency(src, dst),
+            )
+        )
+
+    def _rates(self) -> Dict[int, float]:
+        counts: Dict[LinkId, int] = {}
+        for i, f in enumerate(self.flows):
+            if f.latency_left > 0:
+                continue
+            for l in f.links:
+                counts[l] = counts.get(l, 0) + 1
+        rates = {}
+        sp = self.spec
+        for i, f in enumerate(self.flows):
+            if f.latency_left > 0:
+                continue
+            gamma = sp.collapse_gamma * self.congestion_scale
+            share = min(
+                sp.capacity(l)
+                / counts[l]
+                / (1.0 + gamma * max(0, counts[l] - sp.collapse_k0))
+                for l in f.links
+            )
+            rates[i] = min(share, sp.per_flow_cap_mbps)
+        return rates
+
+    def run_until_drained(self, on_complete) -> None:
+        """Advance until no flows remain. ``on_complete(flow)`` may add flows."""
+        while self.flows:
+            self.max_concurrency = max(self.max_concurrency, len(self.flows))
+            rates = self._rates()
+            # next event: a latency expiry or a flow completion
+            dt = np.inf
+            for i, f in enumerate(self.flows):
+                if f.latency_left > 0:
+                    dt = min(dt, f.latency_left)
+                else:
+                    r = rates[i]
+                    if r > 0:
+                        dt = min(dt, f.remaining_mb / r)
+            if not np.isfinite(dt):
+                raise RuntimeError("simulation stalled")
+            dt = max(dt, 1e-12)
+            self.t += dt
+            still: List[_Flow] = []
+            completed: List[_Flow] = []
+            for i, f in enumerate(self.flows):
+                if f.latency_left > 0:
+                    f.latency_left = max(0.0, f.latency_left - dt)
+                    still.append(f)
+                    continue
+                f.remaining_mb -= rates[i] * dt
+                if f.remaining_mb <= 1e-9:
+                    f.done_at = self.t
+                    completed.append(f)
+                else:
+                    still.append(f)
+            self.flows = still
+            for f in completed:
+                self.finished.append(f)
+                on_complete(f)
+
+
+# ---------------------------------------------------------------------------
+# Protocol drivers
+# ---------------------------------------------------------------------------
+
+
+def simulate_flooding(
+    overlay: Graph, spec: TestbedSpec, model_mb: float
+) -> SimResult:
+    """Uncoordinated flooding: forward every new model to every neighbour
+    immediately on receipt. All of a node's sends contend on its access link.
+    """
+    n = overlay.n
+    received: List[set] = [{u} for u in range(n)]
+    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
+
+    def flood_from(u: int, owner: int) -> None:
+        for v in overlay.neighbors(u):
+            sim.add_flow(u, v, owner, model_mb)
+
+    def on_complete(f: _Flow) -> None:
+        if f.owner not in received[f.dst]:
+            received[f.dst].add(f.owner)
+            flood_from(f.dst, f.owner)
+
+    for u in range(n):
+        flood_from(u, u)
+    sim.run_until_drained(on_complete)
+    durations = [f.done_at - f.start for f in sim.finished]
+    return SimResult(
+        total_time_s=sim.t,
+        mean_transfer_s=float(np.mean(durations)),
+        mean_bandwidth_mbps=float(np.mean([model_mb / d for d in durations])),
+        n_transfers=len(durations),
+        max_concurrency=sim.max_concurrency,
+        per_transfer_s=durations,
+    )
+
+
+def simulate_mosgu(
+    overlay: Graph,
+    spec: TestbedSpec,
+    model_mb: float,
+    plan: Optional[SlotPlan] = None,
+    mst_algorithm: str = "prim",
+    coloring_algorithm: str = "bfs",
+) -> SimResult:
+    """Slot-scheduled gossip on the colored MST (compiled plan).
+
+    Slots are self-clocked: slot k+1's sends start when slot k's transfers
+    complete (the paper's fixed slot length upper-bounds the same thing; we
+    report the achieved time, which the fixed slot would round up).
+    """
+    if plan is None:
+        mst = build_mst(overlay, mst_algorithm)
+        colors = color_graph(mst, coloring_algorithm)
+        plan = compile_dissemination(mst, colors)
+    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
+    for slot in plan.slots:
+        for src, dst, owner in slot.sends:
+            sim.add_flow(src, dst, owner, model_mb)
+        sim.run_until_drained(lambda f: None)
+    durations = [f.done_at - f.start for f in sim.finished]
+    return SimResult(
+        total_time_s=sim.t,
+        mean_transfer_s=float(np.mean(durations)),
+        mean_bandwidth_mbps=float(np.mean([model_mb / d for d in durations])),
+        n_transfers=len(durations),
+        max_concurrency=sim.max_concurrency,
+        per_transfer_s=durations,
+    )
+
+
+def _collect(sim: FluidSimulator, model_mb: float) -> SimResult:
+    durations = [f.done_at - f.start for f in sim.finished]
+    return SimResult(
+        total_time_s=sim.t,
+        mean_transfer_s=float(np.mean(durations)),
+        mean_bandwidth_mbps=float(np.mean([model_mb / d for d in durations])),
+        n_transfers=len(durations),
+        max_concurrency=sim.max_concurrency,
+        per_transfer_s=durations,
+    )
+
+
+def simulate_broadcast_exchange(spec: TestbedSpec, model_mb: float) -> SimResult:
+    """The paper's broadcast baseline for one FL communication round.
+
+    The *overlay* is complete (paper IV-B: every node connects to every other
+    node), so conventional broadcasting means all N nodes push their local
+    model to the other N-1 concurrently — N·(N-1) flows contending on every
+    access link and the trunks. This is why the paper's broadcast columns are
+    identical across underlay topologies (merged cells in Tables III–V).
+    """
+    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
+    for u in range(spec.n):
+        for v in range(spec.n):
+            if u != v:
+                sim.add_flow(u, v, u, model_mb)
+    sim.run_until_drained(lambda f: None)
+    return _collect(sim, model_mb)
+
+
+def simulate_mosgu_exchange(
+    topology_graph: Graph, spec: TestbedSpec, model_mb: float
+) -> SimResult:
+    """One MOSGU exchange step: two colored slots on the MST.
+
+    Each node multicasts its *own* current model to its MST neighbours during
+    its color's slot (slot 0 = color 0 senders, slot 1 = color 1), matching
+    the paper's per-round measurement unit. Full dissemination (Table I) is
+    simulated by :func:`simulate_mosgu`.
+    """
+    mst = build_mst(topology_graph)
+    colors = color_graph(mst)
+    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
+    for c in sorted(set(int(x) for x in colors)):
+        for u in range(mst.n):
+            if int(colors[u]) != c:
+                continue
+            for v in mst.neighbors(u):
+                sim.add_flow(u, v, u, model_mb)
+        sim.run_until_drained(lambda f: None)
+    return _collect(sim, model_mb)
+
+
+def compare_protocols(
+    topology: str,
+    model_mb: float,
+    n: int = 10,
+    seed: int = 0,
+    spec: Optional[TestbedSpec] = None,
+    full_dissemination: bool = False,
+) -> Dict[str, SimResult]:
+    """Run both protocols on one (topology, model size); the benchmark unit.
+
+    ``full_dissemination=False`` reproduces the paper's measurement unit (one
+    exchange step per round); ``True`` runs until every node holds all N
+    models (Table I semantics) for both protocols.
+    """
+    spec = spec or TestbedSpec(n=n)
+    overlay = make_topology(TopologySpec(kind=topology, n=n, seed=seed))
+    if full_dissemination:
+        return {
+            "broadcast": simulate_flooding(overlay, spec, model_mb),
+            "mosgu": simulate_mosgu(overlay, spec, model_mb),
+        }
+    return {
+        "broadcast": simulate_broadcast_exchange(spec, model_mb),
+        "mosgu": simulate_mosgu_exchange(overlay, spec, model_mb),
+    }

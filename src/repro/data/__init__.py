@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, FederatedData, SiloDataset  # noqa: F401

@@ -1,0 +1,4 @@
+"""DFL distributed runtime: gossip collectives, sharding recipes, trainer."""
+from .collectives import GossipPlan, gossip_collective_bytes, gossip_exchange  # noqa: F401
+from .session import DFLSession  # noqa: F401
+from .trainer import DFLConfig, DFLTrainer, TrainState  # noqa: F401

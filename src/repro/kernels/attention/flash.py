@@ -1,0 +1,113 @@
+"""Flash-attention forward kernel (Pallas, TPU target).
+
+One grid cell = (batch, head, q-block). The q-block lives in VMEM; the kernel
+streams kv-blocks with `fori_loop`, maintaining the online-softmax carry
+(m, l, acc) in VREGs/VMEM — the HBM->VMEM traffic is O(s) per q-block instead
+of materializing the (s, s) score matrix. Block shapes are MXU-aligned
+(multiples of 128 on the contracting/lane dims where dtypes allow).
+
+Supports causal masking, sliding windows (gemma2 local layers / long-context
+dense variants), and logit softcap (gemma2). Validated in interpret mode
+against kernels/attention/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+    sliding_window: int, softcap: float, q_block: int
+):
+    qi = pl.program_id(2)  # q-block index
+    q = q_ref[...].astype(jnp.float32)  # (q_block, hd)
+    s_kv = k_ref.shape[0]
+    scale = q.shape[-1] ** -0.5
+    n_kv_blocks = s_kv // block_k
+
+    q_pos = qi * q_block + jax.lax.iota(jnp.int32, q_block)  # (q_block,)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = jnp.ones((q_block, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if sliding_window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((q_block, q_ref.shape[-1]), jnp.float32)
+    m0 = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+
+    if causal:
+        # only kv-blocks at or before this q-block can contribute
+        hi = jnp.minimum((qi + 1) * q_block, s_kv)
+        n_blocks = (hi + block_k - 1) // block_k
+    else:
+        n_blocks = n_kv_blocks
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (b, s_q, h, hd)
+    k: jax.Array,  # (b, s_kv, h, hd)
+    v: jax.Array,  # (b, s_kv, h, hd)
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked attention. Head dim should be a multiple of 8 (MXU lanes 128
+    are ideal); seq lens must divide by the block sizes."""
+    b, s_q, h, hd = q.shape
+    s_kv = k.shape[1]
+    block_q = min(block_q, s_q)
+    block_k = min(block_k, s_kv)
+    assert s_q % block_q == 0 and s_kv % block_k == 0, (s_q, s_kv, block_q, block_k)
+
+    # kernel operates per (b, h): layout (b, h, s, hd)
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+
+    kern = functools.partial(
+        _flash_kernel, block_k=block_k, causal=causal,
+        sliding_window=sliding_window, softcap=softcap, q_block=block_q,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h, s_q // block_q),
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, hd), lambda i, j, qi: (i, j, qi, 0)),
+            pl.BlockSpec((None, None, s_kv, hd), lambda i, j, qi: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s_kv, hd), lambda i, j, qi: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, hd), lambda i, j, qi: (i, j, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qT.shape, q.dtype),
+        interpret=interpret,
+    )(qT, kT, vT)
+    return out.transpose(0, 2, 1, 3)

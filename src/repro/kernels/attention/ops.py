@@ -1,0 +1,23 @@
+"""Jitted public wrapper around the flash kernel (interpret on CPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "sliding_window", "softcap"))
+def flash_attention_op(q, k, v, *, causal=True, sliding_window=0, softcap=0.0):
+    """Dispatches the Pallas kernel; interpret mode executes the same kernel
+    body in Python on CPU (correctness path used by tests/benches here)."""
+    return flash_attention(
+        q, k, v,
+        causal=causal, sliding_window=sliding_window, softcap=softcap,
+        interpret=not _on_tpu(),
+    )

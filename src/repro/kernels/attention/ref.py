@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (b, s_q, h, hd)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, s_q, h, hd = q.shape
+    s_kv = k.shape[1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(s_q)
+    k_pos = jnp.arange(s_kv)
+    mask = jnp.ones((s_q, s_kv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Jitted public wrapper around the gossip-mix kernel."""
+from functools import partial
+
+import jax
+
+from .gossip_mix import gossip_mix
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_p",))
+def gossip_mix_op(buffer, weights, *, block_p=16_384):
+    return gossip_mix(buffer, weights, block_p=block_p, interpret=not _on_tpu())

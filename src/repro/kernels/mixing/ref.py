@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the gossip-mix kernel."""
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(buffer, weights):
+    return jnp.einsum(
+        "np,n->p", buffer.astype(jnp.float32), weights.astype(jnp.float32)
+    ).astype(buffer.dtype)

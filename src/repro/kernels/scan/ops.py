@@ -1,0 +1,20 @@
+"""Jitted public wrapper around the selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .mamba_scan import mamba_selective_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_d", "chunk"))
+def selective_scan_op(dt, Bm, Cm, x, A_log, D, *, block_d=128, chunk=64):
+    return mamba_selective_scan(
+        dt, Bm, Cm, x, A_log, D,
+        block_d=block_d, chunk=chunk, interpret=not _on_tpu(),
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, Bm, Cm, x, A_log, D):
+    """dt/x: (b, s, di); Bm/Cm: (b, s, n); A_log: (di, n); D: (di,).
+    Returns (y (b, s, di), h_last (b, di, n))."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A)  # (b, s, di, n)
+    dBx = (dtf * xf)[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((x.shape[0], x.shape[2], Bm.shape[-1]), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (dA.swapaxes(0, 1), dBx.swapaxes(0, 1),
+         Cm.astype(jnp.float32).swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1) + D.astype(jnp.float32) * xf
+    return y.astype(x.dtype), h_last

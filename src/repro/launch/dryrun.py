@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) and report.
+
+For each pair this proves, without hardware:
+  * the sharding recipe is coherent (no GSPMD errors),
+  * the program fits per-chip HBM (memory_analysis),
+  * and it yields the roofline terms (cost_analysis + HLO collective parse).
+
+Training shapes lower the full DFL train step (local grad step + MOSGU gossip
+exchange); decode shapes lower serve_step (1 token against a seq_len cache);
+prefill lowers the forward pass.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--gossip tree_allreduce]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import INPUT_SHAPES, get_arch, input_specs, list_archs
+from ..dfl.collectives import GossipPlan, gossip_collective_bytes
+from ..dfl.sharding import batch_spec, cache_spec_tree, named, param_spec_tree
+from ..dfl.trainer import DFLConfig, DFLTrainer, TrainState
+from ..models.model import Batch, build_model
+from .mesh import make_production_mesh
+from .roofline import Roofline, extract_roofline, model_flops_for
+
+HBM_PER_CHIP = 16 << 30  # v5e
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _batch_from_specs(cfg, shape) -> Batch:
+    specs = input_specs(cfg, shape)
+    return Batch(
+        tokens=specs["tokens"],
+        labels=specs.get("labels"),
+        encoder_frames=specs.get("encoder_frames"),
+        patch_embeddings=specs.get("patch_embeddings"),
+    )
+
+
+def dryrun_pair(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    gossip_mode: str = "tree_allreduce",
+    verbose: bool = True,
+    arch_overrides: Optional[Dict[str, Any]] = None,
+    dfl_overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """arch_overrides: ArchConfig.replace kwargs (hillclimb variants);
+    dfl_overrides: DFLConfig kwargs (wire_dtype, gossip_interval, ...)."""
+    cfg = get_arch(arch)
+    if arch_overrides:
+        cfg = cfg.replace(**arch_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "gossip_mode": gossip_mode, "status": "ok",
+    }
+    if shape_name in cfg.skip_shapes:
+        result["status"] = "skipped"
+        result["reason"] = "see DESIGN.md §Arch-applicability"
+        return result
+
+    t0 = time.time()
+    model = build_model(cfg, shape_name)
+    try:
+        with mesh:
+            if shape.kind == "train":
+                dflc = DFLConfig(gossip_mode=gossip_mode, **(dfl_overrides or {}))
+                trainer = DFLTrainer(model, mesh, dflc)
+                def make_state(k):
+                    params = model.init(k)
+                    return TrainState(
+                        params=params,
+                        opt_state=trainer.opt.init(params),
+                        step=jnp.zeros((), jnp.int32),
+                    )
+
+                state_shapes = jax.eval_shape(make_state, jax.random.PRNGKey(0))
+                batch_shapes = _batch_from_specs(cfg, shape)
+                step = trainer.jitted_train_step(state_shapes, batch_shapes)
+                lowered = step.lower(state_shapes, batch_shapes)
+            elif shape.kind == "prefill":
+                from ..dfl.sharding import batch_axes as _ba
+
+                model.set_mesh_context(mesh, _ba(mesh, shape.global_batch))
+                params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+                pspec = param_spec_tree(cfg, params_shapes, mesh)
+                batch_shapes = _batch_from_specs(cfg, shape)
+                bspec = jax.tree.map(
+                    lambda leaf: batch_spec(mesh, leaf.shape[0], leaf.ndim)
+                    if leaf is not None else None,
+                    batch_shapes,
+                )
+                fn = jax.jit(
+                    lambda p, b: model.forward(p, b)[0],
+                    in_shardings=(named(mesh, pspec), named(mesh, bspec)),
+                )
+                lowered = fn.lower(params_shapes, batch_shapes)
+            else:  # decode
+                params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+                pspec = param_spec_tree(cfg, params_shapes, mesh)
+                cache_shapes = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch, shape.seq_len)
+                )
+                cspec = cache_spec_tree(cfg, cache_shapes, mesh, shape.global_batch)
+                tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+                pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+                bspec = batch_spec(mesh, shape.global_batch, 2)
+                pos_spec = batch_spec(mesh, shape.global_batch, 1)
+                fn = jax.jit(
+                    model.decode_step,
+                    in_shardings=(
+                        named(mesh, pspec), named(mesh, bspec),
+                        named(mesh, pos_spec), named(mesh, cspec),
+                    ),
+                    out_shardings=(None, named(mesh, cspec)),
+                )
+                lowered = fn.lower(params_shapes, tok, pos, cache_shapes)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        roof = extract_roofline(
+            arch, shape_name, mesh_name, n_chips, compiled,
+            model_flops_for(cfg, shape, shape.kind),
+        )
+        per_chip = roof.peak_memory_per_device
+        result.update(roof.as_dict())
+        result.update(
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            fits_hbm=bool(per_chip <= HBM_PER_CHIP),
+            memory_analysis=str(mem),
+        )
+        if shape.kind == "train":
+            plan = GossipPlan.build(mesh, cfg.node_axes)
+            pbytes = cfg.param_count() * (2 if cfg.dtype == "bfloat16" else 4)
+            result["gossip"] = {
+                "n_nodes": plan.n_nodes,
+                "mode": gossip_mode,
+                "mst_slots": plan.dissemination.n_slots,
+                "tree_slots": plan.tree.n_slots,
+                "analytic_bytes": {
+                    m: gossip_collective_bytes(m, plan, pbytes)
+                    for m in ("dissemination", "tree_allreduce", "mixing",
+                              "flooding", "allreduce_ref")
+                },
+            }
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+                  f"compile={t_compile:.0f}s peak={per_chip/2**30:.2f}GiB "
+                  f"compute={roof.compute_s*1e3:.2f}ms memory={roof.memory_s*1e3:.2f}ms "
+                  f"collective={roof.collective_s*1e3:.2f}ms -> {roof.bottleneck}")
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: {result['error']}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep all arch × shape")
+    ap.add_argument("--gossip", default="tree_allreduce")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in list_archs():
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "multipod" if args.multi_pod else "singlepod"
+    for arch, shape in pairs:
+        res = dryrun_pair(arch, shape, args.multi_pod, args.gossip)
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh_tag}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+  compute    = HLO_FLOPs              / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes_accessed     / (chips × 819 GB/s HBM)
+  collective = collective_bytes       / (chips × 50 GB/s per-link ICI)
+
+cost_analysis() provides FLOPs and bytes (per device, SPMD). Collective
+bytes are NOT in cost_analysis: we parse the compiled HLO and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting all-reduce 2x (reduce-scatter + all-gather
+phases on the wire).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. "f32[128,1024]" or "bf16[2,16]{1,0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_WIRE_WEIGHT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device bytes-on-wire from an SPMD HLO module."""
+    stats = CollectiveStats()
+    seen_done: set = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        # avoid double counting async pairs: -done references the -start value
+        span_text = hlo_text[max(0, m.start() - 80): m.start()]
+        if "-done" in hlo_text[m.start(): m.end()]:
+            continue
+        b = _shape_bytes(type_str)
+        if kind == "all-gather":
+            b = b  # result is the gathered buffer ≈ bytes received
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = (
+            stats.bytes_by_kind.get(kind, 0.0) + b * _WIRE_WEIGHT[kind]
+        )
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    peak_memory_per_device: float
+    model_flops: float  # 6·N·D (train) / 2·N·D (fwd)
+    collective_counts: Dict[str, int]
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops_per_device * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "peak_memory_gb": self.peak_memory_per_device / 2**30,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """6·N·D for training, 2·N·D forward-only (N = active params, D = tokens)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def extract_roofline(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    n_chips: int,
+    compiled,
+    model_flops: float,
+) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Uses the trip-count-aware structural analyzer (hlo_analysis) because
+    `cost_analysis()` counts while-loop bodies once — every scanned layer
+    stack / microbatch loop would otherwise be undercounted (verified).
+    """
+    from .hlo_analysis import analyze_hlo
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    stats = analyze_hlo(hlo_text)
+    peak = getattr(mem, "temp_size_in_bytes", 0) + getattr(mem, "argument_size_in_bytes", 0)
+    return Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        n_chips=n_chips,
+        hlo_flops_per_device=stats.flops,
+        hlo_bytes_per_device=stats.bytes_accessed,
+        collective_bytes_per_device=stats.collective_bytes,
+        peak_memory_per_device=float(peak),
+        model_flops=model_flops,
+        collective_counts={k: int(v) for k, v in stats.collective_counts.items()},
+    )

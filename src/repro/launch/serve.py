@@ -1,0 +1,69 @@
+"""Serving driver: prefill a batch of requests, then batched greedy decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_arch
+    from ..models import Batch, build_model
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_variant()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    b = args.batch
+
+    kw = {}
+    if cfg.family == "audio":
+        kw["encoder_frames"] = jax.random.normal(key, (b, cfg.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        kw["patch_embeddings"] = jax.random.normal(key, (b, cfg.n_patches, cfg.d_model))
+    prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab)
+
+    # prefill: run the full forward, then replay tokens into the cache via
+    # decode steps (cache-filling prefill; keeps one decode path to maintain)
+    decode = jax.jit(model.decode_step)
+    cache = model.init_cache(b, args.cache_len)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    out_tokens = [tok]
+    for t in range(args.prompt_len + args.gen - 1):
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, cache = decode(params, tok, pos, cache)
+        if t + 1 < args.prompt_len:
+            tok = prompts[:, t + 1 : t + 2]  # teacher-forced prompt replay
+        else:
+            tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+            out_tokens.append(tok)
+    gen = jnp.concatenate(out_tokens[1:], axis=1)
+    dt = time.time() - t0
+    steps = args.prompt_len + args.gen - 1
+    print(f"arch={cfg.name} batch={b} {steps} decode steps in {dt:.2f}s "
+          f"({1e3*dt/steps:.1f} ms/step, {b*steps/dt:.1f} tok/s)")
+    print("generated token ids (seq 0):", np.asarray(gen[0]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: unified builder over all assigned architecture families."""
+from .model import Batch, Model, build_model  # noqa: F401

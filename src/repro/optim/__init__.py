@@ -1,0 +1,4 @@
+from .optimizers import (  # noqa: F401
+    Optimizer, adamw, clip_by_global_norm, cosine_schedule, constant_schedule,
+    global_norm, linear_schedule, make_optimizer, momentum_sgd, sgd,
+)

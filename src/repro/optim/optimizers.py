@@ -1,0 +1,251 @@
+"""Optimizers from scratch (no optax): SGD, momentum, AdamW.
+
+Moment dtype and the fp32 master copy are configurable per architecture so
+multi-billion-parameter replicas fit per-chip HBM budgets (ArchConfig
+`optimizer_dtype` / `use_master_fp32`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, lr * cos)
+
+    return fn
+
+
+def linear_schedule(lr: float, warmup: int, total: int):
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        decay = lr * jnp.clip(1 - (step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, decay)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# gradient utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair. update returns (new_params, new_state)."""
+
+    init: Callable[[Params], PyTree]
+    update: Callable[[Params, PyTree, PyTree, jax.Array], Tuple[Params, PyTree]]
+    name: str = "optimizer"
+
+
+def sgd(schedule: Callable, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(params, grads, state, step):
+        lr = schedule(step)
+
+        def upd(p, g):
+            g32 = g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p32
+            return (p32 - lr * g32).astype(p.dtype)
+
+        return jax.tree.map(upd, params, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum_sgd(schedule: Callable, beta: float = 0.9, weight_decay: float = 0.0,
+                 moment_dtype: Any = jnp.float32) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)}
+
+    def update(params, grads, state, step):
+        lr = schedule(step)
+
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m32 = beta * m.astype(jnp.float32) + g32
+            return (p.astype(jnp.float32) - lr * m32).astype(p.dtype), m32.astype(moment_dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m}
+
+    return Optimizer(init, update, "momentum_sgd")
+
+
+def adamw(
+    schedule: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype: Any = jnp.float32,
+    master_fp32: bool = True,
+) -> Optimizer:
+    """AdamW with configurable moment dtype and optional fp32 master weights."""
+
+    def init(params):
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        }
+        if master_fp32:
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(params, grads, state, step):
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v, master):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            base = master.astype(jnp.float32) if master is not None else p.astype(jnp.float32)
+            step_vec = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * base
+            new_master = base - lr * step_vec
+            return new_master.astype(p.dtype), m32.astype(moment_dtype), v32.astype(moment_dtype), (
+                new_master if master is not None else None
+            )
+
+        masters = state.get("master", jax.tree.map(lambda p: None, params))
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_ma = treedef.flatten_up_to(masters)
+        outs = [upd(p, g, m, v, ma) for p, g, m, v, ma in
+                zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_state = {
+            "m": treedef.unflatten([o[1] for o in outs]),
+            "v": treedef.unflatten([o[2] for o in outs]),
+        }
+        if "master" in state:
+            new_state["master"] = treedef.unflatten([o[3] for o in outs])
+        return new_p, new_state
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(
+    schedule: Callable,
+    b2: float = 0.999,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern) without momentum: the second moment of any
+    rank>=2 tensor is stored as a rank-1 row/col factorization, shrinking
+    optimizer state from 2x params to ~params/dim — the realistic choice for
+    training 100B+ replicas under DFL (each node holds full state)."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(leaf, params)}
+
+    def update(params, grads, state, step):
+        lr = schedule(step)
+
+        def upd(p, g, st):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = b2 * st["vr"] + (1 - b2) * g2.mean(axis=-1)
+                vc = b2 * st["vc"] + (1 - b2) * g2.mean(axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = vr[..., :, None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], eps)
+                u = g32 / jnp.sqrt(jnp.maximum(denom, eps))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = b2 * st["v"] + (1 - b2) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                new_st = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * p32
+            return (p32 - lr * u).astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return treedef.unflatten([o[0] for o in outs]), {
+            "f": treedef.unflatten([o[1] for o in outs])
+        }
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(cfg, lr: float = 3e-4, warmup: int = 100, total: int = 10_000) -> Optimizer:
+    """Arch-aware optimizer (kind / moment dtype / master copy from ArchConfig)."""
+    kind = getattr(cfg, "optimizer", "adamw")
+    sched = cosine_schedule(lr, warmup, total)
+    if kind == "adafactor":
+        return adafactor(sched)
+    if kind == "momentum":
+        moment_dtype = jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16" else jnp.float32
+        return momentum_sgd(sched, moment_dtype=moment_dtype)
+    moment_dtype = jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16" else jnp.float32
+    return adamw(sched, moment_dtype=moment_dtype, master_fp32=cfg.use_master_fp32)

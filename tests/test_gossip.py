@@ -1,0 +1,201 @@
+"""Gossip semantics: compiled plans vs the runtime queue engine (Table I)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gossip import GossipEngine, fedavg_numpy
+from repro.core.graph import Graph, TopologySpec, build_mst, color_graph, make_topology
+from repro.core.schedule import (
+    compile_dissemination,
+    compile_flooding,
+    compile_tree_allreduce,
+    decompose_matchings,
+    plan_to_perm_steps,
+)
+
+TOPOLOGIES = ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert")
+
+
+def _setup(kind="complete", n=10, seed=0):
+    g = make_topology(TopologySpec(kind=kind, n=n, seed=seed))
+    mst = build_mst(g)
+    colors = color_graph(mst)
+    return g, mst, colors
+
+
+@st.composite
+def topologies(draw):
+    return _setup(
+        draw(st.sampled_from(TOPOLOGIES)),
+        draw(st.integers(3, 16)),
+        draw(st.integers(0, 500)),
+    )
+
+
+class TestDissemination:
+    @settings(max_examples=40, deadline=None)
+    @given(topologies())
+    def test_everyone_gets_everything(self, setup):
+        g, mst, colors = setup
+        plan = compile_dissemination(mst, colors)
+        assert all(len(r) == g.n for r in plan.received_trace[-1])
+
+    @settings(max_examples=40, deadline=None)
+    @given(topologies())
+    def test_optimal_transmission_count(self, setup):
+        """On a tree, each of N models crosses each of N-1 edges exactly once:
+        exactly N(N-1) transmissions, with zero redundancy (paper III-B)."""
+        g, mst, colors = setup
+        plan = compile_dissemination(mst, colors)
+        assert plan.total_transmissions() == g.n * (g.n - 1)
+
+    @settings(max_examples=40, deadline=None)
+    @given(topologies())
+    def test_no_same_slot_conflicts(self, setup):
+        """Within a slot only one color transmits (the scheduling claim)."""
+        g, mst, colors = setup
+        plan = compile_dissemination(mst, colors)
+        for slot in plan.slots:
+            senders = {src for src, _, _ in slot.sends}
+            assert all(colors[s] == slot.color for s in senders)
+            # senders and receivers are disjoint: no node both tx and rx
+            receivers = {dst for _, dst, _ in slot.sends}
+            assert not senders & receivers
+
+    @settings(max_examples=30, deadline=None)
+    @given(topologies())
+    def test_engine_matches_compiled_plan(self, setup):
+        """The static compiler and the live FIFO engine agree slot for slot."""
+        g, mst, colors = setup
+        plan = compile_dissemination(mst, colors)
+        eng = GossipEngine(mst, colors)
+        eng.begin_round(0)
+        for t, slot in enumerate(plan.slots):
+            rep = eng.step()
+            assert sorted(rep.sends) == sorted(slot.sends), f"slot {t}"
+            assert eng.queue_snapshot() == plan.queue_trace[t], f"slot {t}"
+        assert eng.is_round_complete()
+
+
+class TestQueueSemantics:
+    def test_degree_one_node_never_forwards(self):
+        # path graph: 0-1-2; node 0 and 2 have degree 1
+        mst = Graph.from_edges(3, [(0, 1, 1.0), (1, 2, 1.0)])
+        colors = color_graph(mst)
+        eng = GossipEngine(mst, colors)
+        eng.run_round(0)
+        sends_from_leaves = [
+            (s, d, o) for rep in eng.reports for (s, d, o) in rep.sends
+            if s in (0, 2) and o != s
+        ]
+        assert sends_from_leaves == []
+
+    def test_fifo_order(self):
+        """Oldest entry is transmitted first (paper III-D)."""
+        mst = Graph.from_edges(4, [(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)])
+        colors = color_graph(mst)
+        eng = GossipEngine(mst, colors)
+        eng.begin_round(0)
+        orders = {u: [] for u in range(4)}
+        while not eng.is_round_complete():
+            rep = eng.step()
+            for s, d, o in rep.sends:
+                orders[s].append(o)
+        # each node's first send is its own model
+        for u in range(4):
+            if orders[u]:
+                assert orders[u][0] == u
+
+    def test_retransmission_after_drop(self):
+        """A dropped transfer stays in F and is retransmitted (paper III-D)."""
+        mst = Graph.from_edges(2, [(0, 1, 1.0)])
+        colors = color_graph(mst)
+        dropped = {"done": False}
+
+        def drop_fn(slot, src, dst):
+            if src == 0 and not dropped["done"]:
+                dropped["done"] = True
+                return True
+            return False
+
+        eng = GossipEngine(mst, colors, drop_fn=drop_fn)
+        n_slots = eng.run_round(0)
+        assert dropped["done"]
+        assert all(len(nd.received) == 2 for nd in eng.nodes)
+        drops = sum(len(r.dropped) for r in eng.reports)
+        assert drops == 1
+
+    def test_aggregation_fedavg(self):
+        mst = Graph.from_edges(3, [(0, 1, 1.0), (1, 2, 1.0)])
+        colors = color_graph(mst)
+        eng = GossipEngine(mst, colors)
+        payloads = [{"w": np.full(4, float(u))} for u in range(3)]
+        eng.run_round(0, payloads)
+        aggs = eng.aggregate(fedavg_numpy)
+        for agg in aggs:
+            assert np.allclose(agg["w"], 1.0)  # mean(0,1,2)
+
+
+class TestTreeAllreduce:
+    @settings(max_examples=40, deadline=None)
+    @given(topologies())
+    def test_fewer_slots_and_transmissions(self, setup):
+        """Beyond-paper: 2(N-1) transmissions instead of N(N-1)."""
+        g, mst, colors = setup
+        diss = compile_dissemination(mst, colors)
+        tree = compile_tree_allreduce(mst, colors)
+        assert tree.total_transmissions() == 2 * (g.n - 1)
+        assert tree.total_transmissions() <= diss.total_transmissions()
+        if g.n > 2:
+            assert tree.n_slots <= diss.n_slots
+
+    @settings(max_examples=20, deadline=None)
+    @given(topologies())
+    def test_respects_colors(self, setup):
+        g, mst, colors = setup
+        tree = compile_tree_allreduce(mst, colors)
+        for slot in tree.slots:
+            for src, _, _ in slot.sends:
+                assert colors[src] == slot.color
+
+
+class TestFlooding:
+    @settings(max_examples=30, deadline=None)
+    @given(topologies())
+    def test_flooding_is_redundant(self, setup):
+        """Flooding transmits at least as much as the MST dissemination —
+        strictly more whenever the overlay has redundant edges."""
+        g, mst, colors = setup
+        flood = compile_flooding(g)
+        diss = compile_dissemination(mst, colors)
+        assert flood.total_transmissions() >= diss.total_transmissions()
+        if len(g.edges()) > g.n - 1:
+            assert flood.total_transmissions() > diss.total_transmissions()
+
+
+class TestMatchings:
+    @settings(max_examples=40, deadline=None)
+    @given(topologies())
+    def test_matchings_partition_slots(self, setup):
+        """collective-permute lowering: unique src/dst per matching; union
+        reproduces the slot exactly."""
+        g, mst, colors = setup
+        plan = compile_dissemination(mst, colors)
+        for slot in plan.slots:
+            ms = decompose_matchings(slot.sends)
+            flat = [s for m in ms for s in m]
+            assert sorted(flat) == sorted(slot.sends)
+            for m in ms:
+                srcs = [s for s, _, _ in m]
+                dsts = [d for _, d, _ in m]
+                assert len(set(srcs)) == len(srcs)
+                assert len(set(dsts)) == len(dsts)
+
+    @settings(max_examples=20, deadline=None)
+    @given(topologies())
+    def test_perm_steps_cover_plan(self, setup):
+        g, mst, colors = setup
+        plan = compile_dissemination(mst, colors)
+        steps = plan_to_perm_steps(plan)
+        total = sum(len(s.perm) for s in steps)
+        assert total == plan.total_transmissions()

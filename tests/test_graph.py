@@ -1,0 +1,140 @@
+"""Graph substrate: MST algorithms, colorings, slot length, topologies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (
+    Graph,
+    TopologySpec,
+    build_mst,
+    color_bfs,
+    color_dsatur,
+    color_graph,
+    color_welsh_powell,
+    is_proper_coloring,
+    make_topology,
+    mst_boruvka,
+    mst_kruskal,
+    mst_prim,
+    slot_length_for_colors,
+    slot_length_s,
+)
+
+TOPOLOGIES = ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert")
+
+
+@st.composite
+def connected_graphs(draw, max_n=12):
+    n = draw(st.integers(3, max_n))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n))
+    # random spanning tree guarantees connectivity
+    for v in range(1, n):
+        u = int(rng.integers(0, v))
+        adj[u, v] = adj[v, u] = rng.uniform(0.1, 10)
+    # extra random edges
+    for _ in range(draw(st.integers(0, n * 2))):
+        u, v = rng.integers(0, n, 2)
+        if u != v and adj[u, v] == 0:
+            adj[u, v] = adj[v, u] = rng.uniform(0.1, 10)
+    return Graph(adj)
+
+
+class TestMST:
+    @settings(max_examples=50, deadline=None)
+    @given(connected_graphs())
+    def test_all_algorithms_agree_on_weight(self, g):
+        """Prim, Kruskal, Borůvka must produce equal total MST cost."""
+        w = {name: build_mst(g, name).total_cost()
+             for name in ("prim", "kruskal", "boruvka")}
+        assert abs(w["prim"] - w["kruskal"]) < 1e-9
+        assert abs(w["prim"] - w["boruvka"]) < 1e-9
+
+    @settings(max_examples=50, deadline=None)
+    @given(connected_graphs())
+    def test_tree_properties(self, g):
+        mst = mst_prim(g)
+        assert len(mst.edges()) == g.n - 1
+        assert mst.is_connected()
+
+    @settings(max_examples=30, deadline=None)
+    @given(connected_graphs())
+    def test_mst_is_subgraph_and_not_heavier(self, g):
+        mst = mst_kruskal(g)
+        for u, v, c in mst.edges():
+            assert g.adj[u, v] == pytest.approx(c)
+        assert mst.total_cost() <= g.total_cost() + 1e-9
+
+    def test_disconnected_rejected(self):
+        g = Graph.from_edges(4, [(0, 1, 1.0), (2, 3, 1.0)])
+        with pytest.raises(ValueError):
+            mst_prim(g)
+
+    def test_cost_reports_are_averaged(self):
+        g = Graph.from_cost_reports(2, {0: {1: 2.0}, 1: {0: 4.0}})
+        assert g.adj[0, 1] == pytest.approx(3.0)
+
+
+class TestColoring:
+    @settings(max_examples=50, deadline=None)
+    @given(connected_graphs())
+    def test_mst_coloring_is_proper_and_two_colors(self, g):
+        """A tree is 2-chromatic; BFS must find exactly 2 colors (paper III-C)."""
+        mst = mst_prim(g)
+        colors = color_bfs(mst)
+        assert is_proper_coloring(mst, colors)
+        assert set(int(c) for c in colors) <= {0, 1}
+
+    @settings(max_examples=30, deadline=None)
+    @given(connected_graphs())
+    def test_all_algorithms_proper(self, g):
+        for fn in (color_bfs, color_dsatur, color_welsh_powell):
+            assert is_proper_coloring(g, fn(g)), fn.__name__
+
+    def test_unknown_algorithm(self):
+        g = Graph.from_edges(2, [(0, 1, 1.0)])
+        with pytest.raises(ValueError):
+            color_graph(g, "rainbow")
+
+
+class TestSlotLength:
+    def test_formula(self):
+        # slot = ping_max × M_size × 1000 / ping_size (paper III-C)
+        assert slot_length_s(2.0, 21.2, 64.0) == pytest.approx(2.0 * 21.2 * 1000 / 64)
+
+    def test_uses_max_ping_among_colors(self):
+        g = Graph.from_edges(3, [(0, 1, 5.0), (1, 2, 9.0)])
+        colors = color_bfs(g)
+        slot = slot_length_for_colors(g, colors, 10.0, 64.0)
+        assert slot == pytest.approx(slot_length_s(9.0, 10.0, 64.0))
+
+    def test_zero_ping_size_rejected(self):
+        with pytest.raises(ValueError):
+            slot_length_s(1.0, 1.0, 0.0)
+
+
+class TestTopologies:
+    @pytest.mark.parametrize("kind", TOPOLOGIES)
+    @pytest.mark.parametrize("seed", [0, 1, 7])
+    def test_connected_and_subnet_costs(self, kind, seed):
+        spec = TopologySpec(kind=kind, n=10, seed=seed)
+        g = make_topology(spec)
+        assert g.n == 10
+        assert g.is_connected()
+        # intra-subnet edges must be cheaper than inter-subnet ones
+        intra, inter = [], []
+        for u, v, c in g.edges():
+            same = (u * 3 // 10) == (v * 3 // 10)
+            (intra if same else inter).append(c)
+        if intra and inter:
+            assert max(intra) < min(inter)
+
+    def test_complete_has_all_edges(self):
+        g = make_topology(TopologySpec(kind="complete", n=8))
+        assert len(g.edges()) == 8 * 7 // 2
+
+    def test_deterministic(self):
+        a = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=3))
+        b = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=3))
+        assert np.allclose(a.adj, b.adj)

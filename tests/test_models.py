@@ -1,0 +1,163 @@
+"""Per-arch smoke tests (reduced variants) + decode/forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import Batch, build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=64):
+    kw = {}
+    if cfg.family == "audio":
+        kw["encoder_frames"] = jax.random.normal(KEY, (b, cfg.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        kw["patch_embeddings"] = jax.random.normal(KEY, (b, cfg.n_patches, cfg.d_model))
+    return Batch(
+        tokens=jax.random.randint(KEY, (b, s), 0, cfg.vocab),
+        labels=jax.random.randint(KEY, (b, s), 0, cfg.vocab),
+        **kw,
+    )
+
+
+@pytest.mark.parametrize("arch", list_archs())
+class TestSmoke:
+    """Assigned requirement: reduced variant, one forward/train step on CPU,
+    output shapes + no NaNs."""
+
+    def test_train_step(self, arch):
+        cfg = get_arch(arch).smoke_variant()
+        model = build_model(cfg)
+        params = model.init(KEY)
+        batch = make_batch(cfg)
+        logits, aux = jax.jit(model.forward)(params, batch)
+        assert logits.shape == (2, 64, max(512, cfg.vocab))  # padded vocab
+        assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab])))
+        loss = jax.jit(model.train_loss)(params, batch)
+        assert bool(jnp.isfinite(loss))
+        grads = jax.jit(jax.grad(model.train_loss))(params, batch)
+        gn = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                 for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0
+
+    def test_decode_step(self, arch):
+        cfg = get_arch(arch).smoke_variant()
+        model = build_model(cfg)
+        params = model.init(KEY)
+        cache = model.init_cache(2, 128)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        logits, cache2 = jax.jit(model.decode_step)(params, tok,
+                                                    jnp.zeros(2, jnp.int32), cache)
+        assert logits.shape[0:2] == (2, 1)
+        assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab])))
+        assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+DECODE_CONSISTENCY_ARCHS = [
+    "smollm-360m", "gemma2-2b", "falcon-mamba-7b", "zamba2-7b",
+    "qwen3-moe-30b-a3b", "whisper-tiny",
+]
+
+
+@pytest.mark.parametrize("arch", DECODE_CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode token-by-token must reproduce the full forward
+    logits (validates cache update, ring buffers, rope positions, SSM state)."""
+    cfg = get_arch(arch).smoke_variant()
+    if cfg.n_experts:
+        # capacity-based MoE drops tokens under contention; full-seq and
+        # single-token dispatch drop differently, so disable drops here
+        cfg = cfg.replace(moe_capacity_factor=100.0)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 24
+    batch = make_batch(cfg, b, s)
+    full_logits, _ = jax.jit(model.forward)(params, batch)
+
+    cache = model.init_cache(b, 64)
+    if cfg.family == "audio":
+        # fill cross-attention cache from the encoder output like prefill would
+        cache = _fill_whisper_cross(model, params, batch, cache)
+    step = jax.jit(model.decode_step)
+    errs = []
+    for t in range(s):
+        tok = batch.tokens[:, t : t + 1]
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, cache = step(params, tok, pos, cache)
+        errs.append(float(jnp.abs(
+            logits[:, 0, : cfg.vocab] - full_logits[:, t, : cfg.vocab]).max()))
+    assert max(errs) < 5e-2, f"max abs logit err {max(errs)}"
+
+
+def _fill_whisper_cross(model, params, batch, cache):
+    import jax.numpy as jnp
+
+    from repro.models.layers import rms_norm
+
+    cfg = model.cfg
+    frames = batch.encoder_frames.astype(model.dtype)
+    bsz, f, _ = frames.shape
+    fpos = jnp.broadcast_to(jnp.arange(f), (bsz, f))
+    from repro.models import attention as attn_lib
+    from repro.models.layers import mlp
+
+    def enc_body(carry, block):
+        x, fpos = carry
+        h = attn_lib.attention(block["attn"], rms_norm(x, block["ln1"]), fpos,
+                               causal=False, rope_theta=cfg.rope_theta)
+        x = x + h
+        x = x + mlp(block["mlp"], rms_norm(x, block["ln2"]))
+        return (x, fpos), None
+
+    (enc, _), _ = jax.lax.scan(enc_body, (frames, fpos), params["enc_blocks"])
+    enc = rms_norm(enc, params["enc_final_norm"])
+
+    def per_layer(block):
+        kc = jnp.einsum("bsd,dhk->bshk", enc, block["cross"]["wk"])
+        vc = jnp.einsum("bsd,dhk->bshk", enc, block["cross"]["wv"])
+        return kc, vc
+
+    kcs, vcs = jax.vmap(per_layer)(params["blocks"])
+    return dict(cache, cross_k=kcs.astype(cache["cross_k"].dtype),
+                cross_v=vcs.astype(cache["cross_v"].dtype))
+
+
+def test_vlm_prefix_is_bidirectional():
+    """PaliGemma: patch tokens see each other regardless of order."""
+    cfg = get_arch("paligemma-3b").smoke_variant()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b, s = 1, 8
+    patches = jax.random.normal(KEY, (b, cfg.n_patches, cfg.d_model))
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    base = model.forward(params, Batch(tokens=tokens, patch_embeddings=patches))[0]
+    # permuting *later* patch rows must change text logits if prefix is
+    # bidirectional (causal-only would hide later patches from earlier ones,
+    # but text comes after all patches, so instead check: zeroing the LAST
+    # patch changes the FIRST text logit — visible only via bidirectionality
+    # + text attending to the whole prefix)
+    patches2 = patches.at[:, -1].set(0.0)
+    out2 = model.forward(params, Batch(tokens=tokens, patch_embeddings=patches2))[0]
+    assert float(jnp.abs(base[:, 0] - out2[:, 0]).max()) > 1e-6
+
+
+def test_gemma2_softcap_active():
+    cfg = get_arch("gemma2-2b").smoke_variant()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg, 1, 16)
+    logits, _ = model.forward(params, batch)
+    assert float(jnp.abs(logits[..., : cfg.vocab]).max()) <= cfg.final_logit_softcap + 1e-3
+
+
+def test_long_context_variant_windows():
+    cfg = get_arch("granite-3-2b").smoke_variant()
+    m_short = build_model(cfg, "train_4k")
+    m_long = build_model(cfg, "long_500k")
+    assert m_long.long_context and not m_short.long_context
+    cache = m_long.init_cache(1, 4096)
+    # ring buffer: windowed cache length == sliding_window
+    assert cache["kv"]["k"].shape[2] == cfg.sliding_window

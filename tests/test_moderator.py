@@ -1,0 +1,95 @@
+"""Moderator lifecycle: reports, churn, rotation, protocol facade."""
+import numpy as np
+import pytest
+
+from repro.core.graph import TopologySpec, make_topology
+from repro.core.moderator import ConnectivityReport, Moderator
+from repro.core.protocol import MOSGUConfig, MOSGUProtocol
+
+
+def _fill(mod, n=6):
+    for u in range(n):
+        costs = {v: 1.0 + abs(u - v) for v in range(n) if v != u}
+        mod.receive_report(ConnectivityReport(u, f"10.0.0.{u+1}", costs))
+
+
+class TestModerator:
+    def test_schedule_packet(self):
+        mod = Moderator(0)
+        _fill(mod)
+        pkt = mod.compute_schedule(model_size_mb=21.2)
+        assert set(int(c) for c in pkt.colors) <= {0, 1}
+        assert len(pkt.neighbor_table) == 6
+        # MST: n-1 undirected edges -> degree sum 2(n-1)
+        assert sum(len(v) for v in pkt.neighbor_table.values()) == 2 * 5
+        assert pkt.slot_length_s > 0
+
+    def test_recompute_only_on_churn(self):
+        mod = Moderator(0)
+        _fill(mod)
+        p1 = mod.compute_schedule(10.0)
+        p2 = mod.compute_schedule(10.0)
+        assert p1.version == p2.version  # cached: no churn
+        mod.remove_node(5)
+        p3 = mod.compute_schedule(10.0)
+        assert p3.version == p1.version + 1
+        assert len(p3.neighbor_table) == 5
+
+    def test_join_then_schedule_covers_new_node(self):
+        mod = Moderator(0)
+        _fill(mod, 4)
+        mod.compute_schedule(10.0)
+        mod.receive_report(ConnectivityReport(9, "10.0.0.99",
+                                              {u: 3.0 for u in range(4)}))
+        for u in range(4):
+            mod.reports[u].costs_ms[9] = 3.0
+        pkt = mod.compute_schedule(10.0)
+        assert 9 in pkt.neighbor_table
+
+    def test_election_majority_and_tiebreak(self):
+        mod = Moderator(0)
+        _fill(mod)
+        assert mod.elect_next({0: 2, 1: 2, 2: 3, 3: 3, 4: 2}) == 2
+        assert mod.elect_next({0: 1, 1: 2}) == 1  # tie -> lowest id
+
+    def test_handover_preserves_table(self):
+        mod = Moderator(0)
+        _fill(mod)
+        mod.compute_schedule(10.0)
+        nxt = mod.handover(3)
+        assert nxt.moderator_id == 3
+        assert nxt.members == mod.members
+        assert nxt.compute_schedule(10.0).version == mod.version  # no churn
+
+
+class TestProtocol:
+    def test_round_with_payloads(self):
+        g = make_topology(TopologySpec(kind="complete", n=6, seed=0))
+        proto = MOSGUProtocol(g)
+        payloads = [{"w": np.full(3, float(u))} for u in range(6)]
+        out = proto.run_round(0, payloads)
+        assert out["transmissions"] == 6 * 5
+        for agg in out["aggregates"]:
+            assert np.allclose(agg["w"], np.mean(range(6)))
+
+    def test_churn_recompute(self):
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=8, seed=1))
+        proto = MOSGUProtocol(g)
+        proto.node_leaves(7)
+        assert proto.mst.n == 7
+        out = proto.run_round(0)
+        assert out["transmissions"] == 7 * 6
+
+    def test_traffic_accounting(self):
+        g = make_topology(TopologySpec(kind="complete", n=10, seed=0))
+        proto = MOSGUProtocol(g)
+        t = proto.round_traffic(model_bytes=1e6)
+        assert t["gossip_bytes"] == pytest.approx(90e6)
+        assert t["flooding_bytes"] > t["gossip_bytes"]
+
+    def test_moderator_rotation(self):
+        g = make_topology(TopologySpec(kind="complete", n=5, seed=0))
+        proto = MOSGUProtocol(g)
+        new = proto.rotate_moderator({u: 2 for u in range(5)})
+        assert new == 2
+        assert proto.moderator.moderator_id == 2

@@ -1,0 +1,96 @@
+"""Sharding recipes: every spec must divide its tensor on both meshes."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_arch, list_archs
+from repro.dfl.sharding import batch_axes, batch_spec, cache_spec_tree, param_spec_tree
+from repro.models import build_model
+
+
+class FakeMesh:
+    """Duck-typed mesh: the spec builders only read .shape."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESHES = {
+    "16x16": FakeMesh(data=16, model=16),
+    "2x16x16": FakeMesh(pod=2, data=16, model=16),
+}
+
+
+def _axes_of(spec_entry):
+    if spec_entry is None:
+        return ()
+    if isinstance(spec_entry, tuple):
+        return spec_entry
+    return (spec_entry,)
+
+
+def _check_divisibility(tree, spec_tree, mesh, label):
+    leaves = jax.tree.leaves(tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(specs), label
+    for leaf, spec in zip(leaves, specs):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            n = 1
+            for ax in _axes_of(entry):
+                n *= mesh.shape[ax]
+            assert dim % n == 0, f"{label}: dim {dim} not divisible by {n} ({spec})"
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divide(arch, mesh_name):
+    cfg = get_arch(arch)
+    mesh = MESHES[mesh_name]
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_spec_tree(cfg, params, mesh)
+    _check_divisibility(params, specs, mesh, f"{arch}@{mesh_name}")
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, mesh_name, shape_name):
+    cfg = get_arch(arch)
+    if shape_name in cfg.skip_shapes:
+        pytest.skip("per DESIGN.md §Arch-applicability")
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MESHES[mesh_name]
+    model = build_model(cfg, shape_name)
+    cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    specs = cache_spec_tree(cfg, cache, mesh, shape.global_batch)
+    _check_divisibility(cache, specs, mesh, f"{arch}/{shape_name}@{mesh_name}")
+
+
+def test_batch_axes_policy():
+    mesh = MESHES["2x16x16"]
+    assert batch_axes(mesh, 256) == ("pod", "data")
+    assert batch_axes(mesh, 32) == ("pod", "data")
+    assert batch_axes(mesh, 2) == ("pod",)
+    assert batch_axes(mesh, 1) == ()
+    assert batch_spec(mesh, 1, 2) == P(None, None)
+
+
+def test_embedding_is_vocab_sharded():
+    cfg = get_arch("granite-3-2b")  # vocab 49155: padded to shard
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_spec_tree(cfg, params, MESHES["16x16"])
+    assert tuple(specs["embed"]["table"])[0] == "model"
+    assert params["embed"]["table"].shape[0] % 128 == 0  # padded
+
+
+def test_moe_experts_on_expert_axis():
+    cfg = get_arch("qwen3-moe-30b-a3b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_spec_tree(cfg, params, MESHES["2x16x16"])
+    wg_spec = tuple(specs["blocks"]["moe"]["wg"])
+    assert wg_spec[1] == "data"  # (L, e@data, d, f@model)
+    assert wg_spec[3] == "model"
