@@ -1,15 +1,35 @@
 """Traffic/slot accounting for the compiled gossip plans — the paper's
 structural claims (redundancy removal, bounded concurrency) at TPU scale,
-plus analytic bytes-on-wire for every gossip mode at each arch's size."""
+plus analytic bytes-on-wire for every gossip mode at each arch's size.
+
+Every protocol row is produced from the communication-plan IR
+(:mod:`repro.core.plan`): one policy definition per protocol, counted by the
+vectorized reference executor.
+
+Standalone usage (CI perf trajectory):
+
+  PYTHONPATH=src python benchmarks/gossip_traffic.py --smoke
+
+writes ``BENCH_netsim.json`` with slots / total-time / transmissions per
+protocol on the paper's 10-node testbed.
+"""
 from __future__ import annotations
 
+import json
+import sys
 import time
 
-import numpy as np
+from repro.core.graph import TopologySpec, build_mst, color_graph, make_topology
+from repro.core.netsim import TestbedSpec, simulate_policy
+from repro.core.plan import make_policy, measure_policy
+from repro.core.schedule import (
+    compile_dissemination,
+    compile_flooding,
+    compile_segmented,
+    compile_tree_allreduce,
+)
 
-from repro.configs import get_arch, list_archs
-from repro.core.graph import Graph, TopologySpec, build_mst, color_graph, make_topology
-from repro.core.schedule import compile_dissemination, compile_flooding, compile_tree_allreduce
+BENCH_PROTOCOLS = ("flooding", "mosgu", "segmented", "tree_allreduce")
 
 
 class _FakeMesh:
@@ -18,6 +38,8 @@ class _FakeMesh:
 
 
 def run(csv_rows):
+    from repro.configs import get_arch, list_archs
+
     t0 = time.time()
     # structural claims across topologies and N
     for kind in ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert"):
@@ -28,13 +50,27 @@ def run(csv_rows):
             diss = compile_dissemination(mst, colors)
             tree = compile_tree_allreduce(mst, colors)
             flood = compile_flooding(g)
+            seg = compile_segmented(mst, colors, n_segments=4)
             us = (time.time() - t0) * 1e6
             csv_rows.append((
                 f"gossip_plan/{kind}/n{n}", us,
                 f"diss_tx{diss.total_transmissions()}_flood_tx"
                 f"{flood.total_transmissions()}_tree_tx{tree.total_transmissions()}"
-                f"_slots{diss.n_slots}",
+                f"_seg_tx{seg.total_transmissions()}_slots{diss.n_slots}",
             ))
+
+    # vectorized-engine scaling: the same dissemination policy at sweep scale
+    for n in (100, 1000):
+        g = make_topology(TopologySpec(kind="watts_strogatz", n=n, seed=1))
+        mst = build_mst(g)
+        colors = color_graph(mst)
+        t1 = time.time()
+        stats = measure_policy(make_policy("dissemination", g, mst=mst, colors=colors))
+        us = (time.time() - t1) * 1e6
+        csv_rows.append((
+            f"gossip_engine_scale/n{n}", us,
+            f"slots{stats['n_slots']}_tx{stats['transmissions']}",
+        ))
 
     # per-arch bytes on the wire for one communication round (32-node mesh)
     from repro.dfl.collectives import GossipPlan, gossip_collective_bytes
@@ -45,6 +81,63 @@ def run(csv_rows):
         plan = GossipPlan.build(mesh, cfg.node_axes)
         pbytes = cfg.param_count() * 2  # bf16
         us = (time.time() - t0) * 1e6
-        for mode in ("dissemination", "tree_allreduce", "flooding", "allreduce_ref"):
+        for mode in ("dissemination", "segmented", "tree_allreduce", "flooding",
+                     "allreduce_ref"):
             gb = gossip_collective_bytes(mode, plan, pbytes) / 2**30
             csv_rows.append((f"gossip_bytes/{arch}/{mode}", us, f"{gb:.1f}GiB"))
+
+
+def netsim_bench(n: int = 10, model_mb: float = 21.2, seed: int = 3,
+                 topology: str = "erdos_renyi", n_segments: int = 4) -> dict:
+    """Per-protocol slots / total round time / transmissions on the testbed.
+
+    Each protocol's policy is built once and reused for both the slot count
+    and the fluid simulation, so every row describes one parameterization.
+    All values are deterministic given (topology, n, seed, model_mb).
+    """
+    overlay = make_topology(TopologySpec(kind=topology, n=n, seed=seed))
+    spec = TestbedSpec(n=n)
+    out = {}
+    for name in BENCH_PROTOCOLS:
+        policy = make_policy(name, overlay, n_segments=n_segments)
+        stats = measure_policy(policy)
+        r = simulate_policy(policy, spec, model_mb)
+        out[name] = {
+            "slots": stats["n_slots"],
+            "transmissions": r.n_transfers,
+            "total_time_s": round(r.total_time_s, 4),
+            "mean_transfer_s": round(r.mean_transfer_s, 4),
+            "mean_bandwidth_mbps": round(r.mean_bandwidth_mbps, 4),
+            "max_concurrency": r.max_concurrency,
+        }
+    return {
+        "topology": topology,
+        "n": n,
+        "model_mb": model_mb,
+        "seed": seed,
+        "n_segments": n_segments,
+        "protocols": out,
+    }
+
+
+def main(argv) -> int:
+    smoke = "--smoke" in argv
+    bench = netsim_bench()
+    with open("BENCH_netsim.json", "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"wrote BENCH_netsim.json ({bench['topology']}, n={bench['n']}, "
+          f"{bench['model_mb']}MB model)")
+    for name, row in bench["protocols"].items():
+        print(f"  {name:15s} slots={row['slots']:4d} tx={row['transmissions']:5d} "
+              f"round={row['total_time_s']:8.2f}s bw={row['mean_bandwidth_mbps']:6.2f}MB/s")
+    if not smoke:
+        csv_rows = []
+        run(csv_rows)
+        print("name,us_per_call,derived")
+        for name, us, derived in csv_rows:
+            print(f"{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

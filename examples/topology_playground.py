@@ -1,8 +1,12 @@
 """Topology playground: how MST+coloring behave across the paper's four
-graph families, at the paper's N=10 and at TPU-mesh scale (N=32 nodes).
+graph families, at the paper's N=10 and at TPU-mesh scale (N=32 nodes) —
+plus the protocol matrix of the communication-plan IR and the vectorized
+engine at sweep scale (N=1000).
 
   PYTHONPATH=src python examples/topology_playground.py
 """
+import time
+
 import numpy as np
 
 from repro.core import (
@@ -11,14 +15,18 @@ from repro.core import (
     color_graph,
     compile_dissemination,
     compile_flooding,
+    compile_segmented,
     compile_tree_allreduce,
+    make_policy,
     make_topology,
+    measure_policy,
 )
 
 
 def main():
     print(f"{'topology':18s} {'N':>3s} {'edges':>6s} {'MST-cost':>9s} "
-          f"{'slots':>6s} {'diss-tx':>8s} {'flood-tx':>9s} {'tree-tx':>8s}")
+          f"{'slots':>6s} {'diss-tx':>8s} {'flood-tx':>9s} {'tree-tx':>8s} "
+          f"{'seg-tx':>7s} {'seg-slots':>9s}")
     for kind in ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert"):
         for n in (10, 32):
             g = make_topology(TopologySpec(kind=kind, n=n, seed=1))
@@ -27,13 +35,36 @@ def main():
             diss = compile_dissemination(mst, colors)
             tree = compile_tree_allreduce(mst, colors)
             flood = compile_flooding(g)
+            seg = compile_segmented(mst, colors, n_segments=4)
             print(f"{kind:18s} {n:3d} {len(g.edges()):6d} "
                   f"{mst.total_cost():9.2f} {diss.n_slots:6d} "
                   f"{diss.total_transmissions():8d} "
                   f"{flood.total_transmissions():9d} "
-                  f"{tree.total_transmissions():8d}")
+                  f"{tree.total_transmissions():8d} "
+                  f"{seg.total_transmissions():7d} "
+                  f"{seg.n_slots:9d}")
     print("\n(diss-tx is always N(N-1) — the MST removes every redundant "
-          "transmission; flooding repeats each model on every overlay edge.)")
+          "transmission; flooding repeats each model on every overlay edge; "
+          "segmented gossip ships 4x the transfers at 1/4 the bytes each — "
+          "same total traffic, pipelined into shorter transfers.)")
+
+    # every protocol is one IR policy; the registry builds them all
+    g = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=1))
+    print("\nprotocol matrix on ER(10) (one policy each, reference executor):")
+    for name in ("flooding", "dissemination", "segmented", "tree_allreduce"):
+        stats = measure_policy(make_policy(name, g))
+        print(f"  {name:15s} slots={stats['n_slots']:4d} "
+              f"tx={stats['transmissions']:5d} "
+              f"peak-concurrency={stats['max_concurrent_sends']:4d}")
+
+    # vectorized slot advance: the same policy at topology-sweep scale
+    g1k = make_topology(TopologySpec(kind="watts_strogatz", n=1000, seed=1))
+    t0 = time.monotonic()
+    stats = measure_policy(make_policy("dissemination", g1k))
+    dt = time.monotonic() - t0
+    print(f"\nvectorized engine, N=1000 watts_strogatz: "
+          f"{stats['transmissions']} transmissions over {stats['n_slots']} "
+          f"slots simulated in {dt:.2f}s")
 
     # MST algorithms agree; colorings are 2-chromatic
     g = make_topology(TopologySpec(kind="erdos_renyi", n=24, seed=7))

@@ -1,4 +1,4 @@
-"""Core MOSGU library: graphs, schedules, gossip, moderator, network sim."""
+"""Core MOSGU library: plan IR, graphs, schedules, gossip, moderator, netsim."""
 from .graph import (  # noqa: F401
     Graph,
     TopologySpec,
@@ -14,6 +14,21 @@ from .graph import (  # noqa: F401
 )
 from .gossip import GossipEngine, GossipNode, QueueEntry, fedavg_numpy  # noqa: F401
 from .moderator import ConnectivityReport, Moderator, SchedulePacket  # noqa: F401
+from .plan import (  # noqa: F401
+    BroadcastOncePolicy,
+    CommPolicy,
+    Deliveries,
+    DisseminationPolicy,
+    FloodingPolicy,
+    MstExchangePolicy,
+    ReplayPolicy,
+    SegmentedGossipPolicy,
+    SlotSends,
+    TreeAllreducePolicy,
+    compile_policy,
+    make_policy,
+    measure_policy,
+)
 from .protocol import MOSGUConfig, MOSGUProtocol  # noqa: F401
 from .schedule import (  # noqa: F401
     PermStep,
@@ -21,7 +36,9 @@ from .schedule import (  # noqa: F401
     SlotPlan,
     compile_dissemination,
     compile_flooding,
+    compile_segmented,
     compile_tree_allreduce,
     decompose_matchings,
+    link_contention_profile,
     plan_to_perm_steps,
 )

@@ -1,9 +1,9 @@
-"""Runtime gossip engine — the paper's GU step with live FIFO queues.
+"""Runtime gossip engine — the slot-synchronous IR interpreter with payloads.
 
-This is the *dynamic* counterpart of the compiled plans in
-:mod:`repro.core.schedule`: nodes hold real FIFO queues of
-``(owner, round, payload)`` tuples and the engine advances slot by slot,
-supporting the behaviours the static compiler cannot express:
+This is the *dynamic* executor of the communication-plan IR in
+:mod:`repro.core.plan`: the policy owns the protocol state machine (FIFO
+queues, phase tracking), while the engine moves real payload objects and
+supports the behaviours the static compiler cannot express:
 
 * transient link failures with retransmission in the node's next turn
   (paper III-D: "if the network temporarily disrupts during transmission,
@@ -12,22 +12,24 @@ supporting the behaviours the static compiler cannot express:
   which recompiles MST/colors),
 * arbitrary payloads (numpy arrays, pytrees, byte strings).
 
-Equivalence with the compiled dissemination plan (no failures) is enforced
-by tests — the queue traces must match slot for slot.
+Equivalence with the compiled plans (no failures) is enforced by tests —
+since both now interpret the *same* policy, slot-for-slot agreement is a
+property of the architecture, not a coincidence of two implementations.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
 from .graph import Graph
+from .plan import CommPolicy, DisseminationPolicy, Send
 
 
 @dataclass
 class QueueEntry:
-    owner: int
+    owner: int  # payload id (model owner; owner*S+seg for segmented gossip)
     round_idx: int
     payload: Any = None
     predecessor: int = -1  # node we received it from; -1 = locally produced
@@ -35,110 +37,107 @@ class QueueEntry:
 
 @dataclass
 class GossipNode:
-    """One DFL participant: a FIFO queue F plus a store of received models."""
+    """One DFL participant's view: id, neighbours, and received payloads."""
 
     node_id: int
     neighbors: List[int]
-    fifo: List[QueueEntry] = field(default_factory=list)
     received: Dict[int, QueueEntry] = field(default_factory=dict)
 
     @property
     def degree(self) -> int:
         return len(self.neighbors)
 
-    def produce(self, round_idx: int, payload: Any = None) -> None:
-        """Enqueue the locally trained model for this round."""
-        entry = QueueEntry(self.node_id, round_idx, payload, predecessor=-1)
-        self.received[self.node_id] = entry
-        if self.neighbors:
-            self.fifo.append(entry)
-
-    def deliver(self, entry: QueueEntry, from_node: int) -> bool:
-        """Receive a model from a neighbour. Returns True if it was new."""
-        if entry.owner in self.received:
-            return False
-        stored = QueueEntry(entry.owner, entry.round_idx, entry.payload, from_node)
-        self.received[entry.owner] = stored
-        # Degree-1 nodes never forward received models back (paper III-D).
-        if self.degree > 1:
-            self.fifo.append(stored)
-        return True
-
-    def queue_owners(self) -> List[int]:
-        return [e.owner for e in self.fifo]
-
 
 @dataclass
 class SlotReport:
     slot_idx: int
     color: int
-    sends: List[Tuple[int, int, int]]  # (src, dst, owner)
-    dropped: List[Tuple[int, int, int]]  # failed transfers (kept in F)
+    sends: List[Send]  # (src, dst, payload_id)
+    dropped: List[Send]  # failed transfers (kept in F)
 
 
 class GossipEngine:
-    """Slot-synchronous executor of the MOSGU gossip over an MST.
+    """Slot-synchronous runtime executor of a communication policy.
+
+    By default runs the paper's MOSGU dissemination over an MST; pass any
+    slot policy from :mod:`repro.core.plan` (segmented gossip, tree
+    all-reduce, flooding) to execute it with live payloads instead.
 
     ``drop_fn(slot_idx, src, dst)`` may return True to simulate a transient
-    link failure; the entry then stays at the *head* of the sender's FIFO and
-    is retransmitted on the node's next active slot.
+    link failure; the policy then keeps the entry at the *head* of the
+    sender's FIFO and it is retransmitted on the node's next active slot.
     """
 
     def __init__(
         self,
-        mst: Graph,
-        colors: np.ndarray,
+        mst: Optional[Graph] = None,
+        colors: Optional[np.ndarray] = None,
         first_color: int = 0,
         drop_fn: Optional[Callable[[int, int, int], bool]] = None,
+        policy: Optional[CommPolicy] = None,
     ) -> None:
-        if not mst.is_connected():
-            raise ValueError("gossip requires a connected MST")
-        self.mst = mst
-        self.colors = np.asarray(colors)
-        self.nodes = [GossipNode(u, mst.neighbors(u)) for u in range(mst.n)]
+        if policy is None:
+            if mst is None or colors is None:
+                raise ValueError("need either a policy or (mst, colors)")
+            policy = DisseminationPolicy(mst, colors, first_color)
+        self.policy = policy
+        self.mst = policy.graph if policy.graph is not None else mst
+        self.colors = policy.colors
         self.drop_fn = drop_fn
+        graph = self.mst
+        self.nodes = [
+            GossipNode(u, graph.neighbors(u) if graph is not None else [])
+            for u in range(policy.n)
+        ]
         self.slot_idx = 0
-        cycle = sorted(set(int(c) for c in self.colors))
-        if first_color in cycle:
-            i0 = cycle.index(first_color)
-            cycle = cycle[i0:] + cycle[:i0]
-        self.color_cycle = cycle
         self.reports: List[SlotReport] = []
+        self._store: Dict[int, Any] = {}
+        self._round_idx = 0
 
     @property
     def n(self) -> int:
-        return self.mst.n
+        return self.policy.n
 
     # -- round lifecycle ----------------------------------------------------
     def begin_round(self, round_idx: int, payloads: Optional[Sequence[Any]] = None) -> None:
-        for u, node in enumerate(self.nodes):
-            node.fifo.clear()
+        self.policy.reset()
+        self._round_idx = round_idx
+        self._store = {}
+        for node in self.nodes:
             node.received.clear()
-            node.produce(round_idx, payloads[u] if payloads is not None else None)
+        for u, node in enumerate(self.nodes):
+            pids = self.policy.initial_payload_ids(u)
+            if payloads is not None and pids:
+                if len(pids) == 1:
+                    self._store[pids[0]] = payloads[u]
+                else:
+                    parts = payloads[u]
+                    if not isinstance(parts, (list, tuple)) or len(parts) != len(pids):
+                        raise ValueError(
+                            f"node {u}: segmented policies need one payload per "
+                            f"segment ({len(pids)} expected)")
+                    for pid, part in zip(pids, parts):
+                        self._store[pid] = part
+            for pid in pids:
+                node.received[pid] = QueueEntry(pid, round_idx, self._store.get(pid), -1)
 
     def step(self) -> SlotReport:
         """Advance one colored slot."""
-        color = self.color_cycle[self.slot_idx % len(self.color_cycle)]
-        report = SlotReport(self.slot_idx, color, [], [])
-        deliveries: List[Tuple[int, QueueEntry, int]] = []  # (dst, entry, src)
-        for node in self.nodes:
-            if int(self.colors[node.node_id]) != color or not node.fifo:
-                continue
-            entry = node.fifo[0]
-            targets = [v for v in node.neighbors if v != entry.predecessor]
-            dropped_any = False
-            for v in targets:
-                if self.drop_fn is not None and self.drop_fn(self.slot_idx, node.node_id, v):
-                    report.dropped.append((node.node_id, v, entry.owner))
-                    dropped_any = True
-                else:
-                    deliveries.append((v, entry, node.node_id))
-                    report.sends.append((node.node_id, v, entry.owner))
-            # Paper III-D: remove once transmitted; keep in F on disruption.
-            if not dropped_any:
-                node.fifo.pop(0)
-        for dst, entry, src in deliveries:
-            self.nodes[dst].deliver(entry, src)
+        sends = self.policy.emit(self.slot_idx)
+        tuples = sends.tuples()
+        ok = np.ones(len(tuples), dtype=bool)
+        report = SlotReport(self.slot_idx, sends.color, [], [])
+        for i, (src, dst, pid) in enumerate(tuples):
+            if self.drop_fn is not None and self.drop_fn(self.slot_idx, src, dst):
+                ok[i] = False
+                report.dropped.append((src, dst, pid))
+            else:
+                report.sends.append((src, dst, pid))
+        delivered = self.policy.commit(self.slot_idx, sends, ok)
+        for src, dst, pid in zip(delivered.src.tolist(), delivered.dst.tolist(),
+                                 delivered.payload.tolist()):
+            self.nodes[dst].received[pid] = QueueEntry(
+                pid, self._round_idx, self._store.get(pid), src)
         self.slot_idx += 1
         self.reports.append(report)
         return report
@@ -146,7 +145,7 @@ class GossipEngine:
     def run_round(
         self, round_idx: int, payloads: Optional[Sequence[Any]] = None, max_slots: int = 100_000
     ) -> int:
-        """Run slots until full dissemination; return number of slots used."""
+        """Run slots until the policy completes; return number of slots used."""
         self.begin_round(round_idx, payloads)
         start = self.slot_idx
         while not self.is_round_complete():
@@ -156,23 +155,33 @@ class GossipEngine:
         return self.slot_idx - start
 
     def is_round_complete(self) -> bool:
-        return all(len(nd.received) == self.n for nd in self.nodes) and all(
-            not nd.fifo for nd in self.nodes
-        )
+        return self.policy.done()
 
     # -- inspection ---------------------------------------------------------
     def queue_snapshot(self) -> List[List[int]]:
-        return [nd.queue_owners() for nd in self.nodes]
+        return self.policy.queue_snapshot()
 
     def received_snapshot(self) -> List[Set[int]]:
         return [set(nd.received.keys()) for nd in self.nodes]
 
     def aggregate(self, combine: Callable[[List[Any]], Any]) -> List[Any]:
-        """Per-node aggregation over all received payloads (e.g. FedAvg)."""
-        out = []
+        """Per-node aggregation over all received payloads (e.g. FedAvg).
+
+        For segmented policies each node returns a list of S per-segment
+        aggregates (segment j combines every owner's j-th segment), which
+        concatenate back into the aggregated model.
+        """
+        S = getattr(self.policy, "segments", 1)
+        out: List[Any] = []
         for nd in self.nodes:
-            payloads = [nd.received[o].payload for o in sorted(nd.received)]
-            out.append(combine(payloads))
+            if S == 1:
+                out.append(combine([nd.received[o].payload for o in sorted(nd.received)]))
+            else:
+                out.append([
+                    combine([nd.received[pid].payload
+                             for pid in sorted(nd.received) if pid % S == j])
+                    for j in range(S)
+                ])
         return out
 
 

@@ -27,13 +27,21 @@ class ConnectivityReport:
 
 @dataclass
 class SchedulePacket:
-    """What the moderator broadcasts back to every node."""
+    """What the moderator broadcasts back to every node.
+
+    ``protocol``/``n_segments`` name the communication-plan policy
+    (:mod:`repro.core.plan`) every node must instantiate for the round, so a
+    protocol switch (e.g. dissemination → segmented gossip) is just a new
+    packet — no node-side code changes.
+    """
 
     version: int
     colors: np.ndarray
     neighbor_table: Dict[int, List[int]]  # MST adjacency per node
     slot_length_s: float
     moderator: int
+    protocol: str = "dissemination"
+    n_segments: int = 1
 
 
 class Moderator:
@@ -45,11 +53,15 @@ class Moderator:
         mst_algorithm: str = "prim",
         coloring_algorithm: str = "bfs",
         ping_size_bytes: float = 64.0,
+        protocol: str = "dissemination",
+        n_segments: int = 1,
     ) -> None:
         self.moderator_id = moderator_id
         self.mst_algorithm = mst_algorithm
         self.coloring_algorithm = coloring_algorithm
         self.ping_size_bytes = ping_size_bytes
+        self.protocol = protocol
+        self.n_segments = n_segments
         self.reports: Dict[int, ConnectivityReport] = {}
         self.addresses: Dict[int, str] = {}
         self.version = 0
@@ -104,6 +116,8 @@ class Moderator:
             neighbor_table=table,
             slot_length_s=slot,
             moderator=self.moderator_id,
+            protocol=self.protocol,
+            n_segments=self.n_segments,
         )
         self._cached = packet
         self._dirty = False
@@ -127,7 +141,8 @@ class Moderator:
     def handover(self, new_moderator: int) -> "Moderator":
         """Forward the full connection table to the next moderator."""
         nxt = Moderator(
-            new_moderator, self.mst_algorithm, self.coloring_algorithm, self.ping_size_bytes
+            new_moderator, self.mst_algorithm, self.coloring_algorithm,
+            self.ping_size_bytes, self.protocol, self.n_segments,
         )
         nxt.reports = {k: ConnectivityReport(v.node_id, v.address, dict(v.costs_ms))
                        for k, v in self.reports.items()}

@@ -13,6 +13,12 @@ at any instant each flow's rate is ``min`` over its traversed links of the
 link's fair share (capacity / flows on link); the simulation advances to the
 next flow completion, re-solving rates each time.
 
+Protocols are *not* implemented here: :func:`simulate_policy` is a thin
+interpreter of the communication-plan IR (:mod:`repro.core.plan`). Slot
+policies run with a drain barrier between slots (the paper's self-clocked
+slots); event policies (flooding) launch new flows the instant a delivery
+completes.
+
 Metrics match the paper's three tables:
   * bandwidth (MB/s): mean per-transfer achieved rate         (Table III)
   * single transfer time (s): mean flow duration              (Table IV)
@@ -26,7 +32,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .graph import Graph, TopologySpec, _subnet_of, build_mst, color_graph, make_topology
-from .schedule import SlotPlan, compile_dissemination, compile_flooding
+from .plan import (
+    BroadcastOncePolicy,
+    CommPolicy,
+    DisseminationPolicy,
+    FloodingPolicy,
+    MstExchangePolicy,
+    ReplayPolicy,
+    Send,
+    SlotPlan,
+    make_policy,
+)
 
 LinkId = Tuple[str, int, int]  # ("access-up"/"access-down", node, -1) or ("trunk", r1, r2)
 
@@ -76,6 +92,7 @@ class _Flow:
     src: int
     dst: int
     owner: int
+    size_mb: float
     remaining_mb: float
     links: List[LinkId]
     start: float
@@ -91,6 +108,10 @@ class SimResult:
     n_transfers: int
     max_concurrency: int
     per_transfer_s: List[float] = field(default_factory=list)
+    # Optional launch trace for cross-executor equivalence tests:
+    # send_trace[t] = the (src, dst, payload) flows launched in batch t
+    # (one batch per slot for slot policies; per trigger for event policies).
+    send_trace: Optional[List[List[Send]]] = None
 
 
 class FluidSimulator:
@@ -110,6 +131,7 @@ class FluidSimulator:
                 src,
                 dst,
                 owner,
+                size_mb,
                 size_mb,
                 self.spec.links_for(src, dst),
                 self.t,
@@ -176,8 +198,75 @@ class FluidSimulator:
                 on_complete(f)
 
 
+def _collect(sim: FluidSimulator, send_trace: Optional[List[List[Send]]] = None) -> SimResult:
+    """Assemble the paper's three metrics from a drained simulator."""
+    durations = [f.done_at - f.start for f in sim.finished]
+    rates = [f.size_mb / d for f, d in zip(sim.finished, durations)]
+    return SimResult(
+        total_time_s=sim.t,
+        mean_transfer_s=float(np.mean(durations)),
+        mean_bandwidth_mbps=float(np.mean(rates)),
+        n_transfers=len(durations),
+        max_concurrency=sim.max_concurrency,
+        per_transfer_s=durations,
+        send_trace=send_trace,
+    )
+
+
 # ---------------------------------------------------------------------------
-# Protocol drivers
+# The one protocol driver: interpret a communication policy over the testbed
+# ---------------------------------------------------------------------------
+
+
+def simulate_policy(
+    policy: CommPolicy,
+    spec: TestbedSpec,
+    model_mb: float,
+    record_trace: bool = False,
+    max_slots: int = 100_000,
+) -> SimResult:
+    """Execute a communication policy on the fluid testbed.
+
+    Slot policies are self-clocked: slot k+1's sends start when slot k's
+    transfers complete (the paper's fixed slot length upper-bounds the same
+    thing; we report the achieved time, which the fixed slot would round up).
+    Event policies launch follow-up flows the instant a delivery completes.
+    Each flow carries ``model_mb × policy.payload_fraction`` MB (fractions
+    below 1 model segmented gossip).
+    """
+    size_mb = model_mb * policy.payload_fraction
+    sim = FluidSimulator(spec, (size_mb / spec.collapse_ref_mb) ** 0.5)
+    trace: Optional[List[List[Send]]] = [] if record_trace else None
+    policy.reset()
+
+    def launch(sends: Sequence[Send]) -> None:
+        if trace is not None:
+            trace.append(list(sends))
+        for src, dst, payload in sends:
+            sim.add_flow(src, dst, payload, size_mb)
+
+    if policy.sync == "event":
+        launch(policy.initial_sends())
+
+        def on_complete(f: _Flow) -> None:
+            launch(policy.on_delivered(f.src, f.dst, f.owner))
+
+        sim.run_until_drained(on_complete)
+    else:
+        t = 0
+        while not policy.done():
+            if t >= max_slots:
+                raise RuntimeError(f"{policy.kind} did not converge")
+            sends = policy.emit(t)
+            launch(sends.tuples())
+            policy.commit(t, sends)
+            sim.run_until_drained(lambda f: None)
+            t += 1
+    return _collect(sim, trace)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat wrappers (each is now one policy + the shared driver)
 # ---------------------------------------------------------------------------
 
 
@@ -187,31 +276,7 @@ def simulate_flooding(
     """Uncoordinated flooding: forward every new model to every neighbour
     immediately on receipt. All of a node's sends contend on its access link.
     """
-    n = overlay.n
-    received: List[set] = [{u} for u in range(n)]
-    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
-
-    def flood_from(u: int, owner: int) -> None:
-        for v in overlay.neighbors(u):
-            sim.add_flow(u, v, owner, model_mb)
-
-    def on_complete(f: _Flow) -> None:
-        if f.owner not in received[f.dst]:
-            received[f.dst].add(f.owner)
-            flood_from(f.dst, f.owner)
-
-    for u in range(n):
-        flood_from(u, u)
-    sim.run_until_drained(on_complete)
-    durations = [f.done_at - f.start for f in sim.finished]
-    return SimResult(
-        total_time_s=sim.t,
-        mean_transfer_s=float(np.mean(durations)),
-        mean_bandwidth_mbps=float(np.mean([model_mb / d for d in durations])),
-        n_transfers=len(durations),
-        max_concurrency=sim.max_concurrency,
-        per_transfer_s=durations,
-    )
+    return simulate_policy(FloodingPolicy(overlay), spec, model_mb)
 
 
 def simulate_mosgu(
@@ -222,42 +287,13 @@ def simulate_mosgu(
     mst_algorithm: str = "prim",
     coloring_algorithm: str = "bfs",
 ) -> SimResult:
-    """Slot-scheduled gossip on the colored MST (compiled plan).
-
-    Slots are self-clocked: slot k+1's sends start when slot k's transfers
-    complete (the paper's fixed slot length upper-bounds the same thing; we
-    report the achieved time, which the fixed slot would round up).
-    """
-    if plan is None:
-        mst = build_mst(overlay, mst_algorithm)
-        colors = color_graph(mst, coloring_algorithm)
-        plan = compile_dissemination(mst, colors)
-    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
-    for slot in plan.slots:
-        for src, dst, owner in slot.sends:
-            sim.add_flow(src, dst, owner, model_mb)
-        sim.run_until_drained(lambda f: None)
-    durations = [f.done_at - f.start for f in sim.finished]
-    return SimResult(
-        total_time_s=sim.t,
-        mean_transfer_s=float(np.mean(durations)),
-        mean_bandwidth_mbps=float(np.mean([model_mb / d for d in durations])),
-        n_transfers=len(durations),
-        max_concurrency=sim.max_concurrency,
-        per_transfer_s=durations,
-    )
-
-
-def _collect(sim: FluidSimulator, model_mb: float) -> SimResult:
-    durations = [f.done_at - f.start for f in sim.finished]
-    return SimResult(
-        total_time_s=sim.t,
-        mean_transfer_s=float(np.mean(durations)),
-        mean_bandwidth_mbps=float(np.mean([model_mb / d for d in durations])),
-        n_transfers=len(durations),
-        max_concurrency=sim.max_concurrency,
-        per_transfer_s=durations,
-    )
+    """Slot-scheduled gossip on the colored MST (live policy, or a compiled
+    plan replayed through :class:`repro.core.plan.ReplayPolicy`)."""
+    if plan is not None:
+        return simulate_policy(ReplayPolicy(plan), spec, model_mb)
+    mst = build_mst(overlay, mst_algorithm)
+    colors = color_graph(mst, coloring_algorithm)
+    return simulate_policy(DisseminationPolicy(mst, colors), spec, model_mb)
 
 
 def simulate_broadcast_exchange(spec: TestbedSpec, model_mb: float) -> SimResult:
@@ -269,13 +305,7 @@ def simulate_broadcast_exchange(spec: TestbedSpec, model_mb: float) -> SimResult
     access link and the trunks. This is why the paper's broadcast columns are
     identical across underlay topologies (merged cells in Tables III–V).
     """
-    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
-    for u in range(spec.n):
-        for v in range(spec.n):
-            if u != v:
-                sim.add_flow(u, v, u, model_mb)
-    sim.run_until_drained(lambda f: None)
-    return _collect(sim, model_mb)
+    return simulate_policy(BroadcastOncePolicy(spec.n), spec, model_mb)
 
 
 def simulate_mosgu_exchange(
@@ -290,15 +320,7 @@ def simulate_mosgu_exchange(
     """
     mst = build_mst(topology_graph)
     colors = color_graph(mst)
-    sim = FluidSimulator(spec, (model_mb / spec.collapse_ref_mb) ** 0.5)
-    for c in sorted(set(int(x) for x in colors)):
-        for u in range(mst.n):
-            if int(colors[u]) != c:
-                continue
-            for v in mst.neighbors(u):
-                sim.add_flow(u, v, u, model_mb)
-        sim.run_until_drained(lambda f: None)
-    return _collect(sim, model_mb)
+    return simulate_policy(MstExchangePolicy(mst, colors), spec, model_mb)
 
 
 def compare_protocols(
@@ -308,15 +330,28 @@ def compare_protocols(
     seed: int = 0,
     spec: Optional[TestbedSpec] = None,
     full_dissemination: bool = False,
+    protocols: Optional[Sequence[str]] = None,
+    n_segments: int = 4,
 ) -> Dict[str, SimResult]:
-    """Run both protocols on one (topology, model size); the benchmark unit.
+    """Run protocols on one (topology, model size); the benchmark unit.
 
-    ``full_dissemination=False`` reproduces the paper's measurement unit (one
-    exchange step per round); ``True`` runs until every node holds all N
-    models (Table I semantics) for both protocols.
+    Default (``protocols=None``) reproduces the paper's two-column tables:
+    ``full_dissemination=False`` measures one exchange step per round;
+    ``True`` runs until every node holds all N models (Table I semantics).
+
+    Passing ``protocols`` (names from :func:`repro.core.plan.make_policy`,
+    e.g. ``("flooding", "mosgu", "segmented", "tree_allreduce")``) instead
+    runs each named policy to completion over the same overlay — the
+    full-dissemination protocol matrix.
     """
     spec = spec or TestbedSpec(n=n)
     overlay = make_topology(TopologySpec(kind=topology, n=n, seed=seed))
+    if protocols is not None:
+        return {
+            name: simulate_policy(
+                make_policy(name, overlay, n_segments=n_segments), spec, model_mb)
+            for name in protocols
+        }
     if full_dissemination:
         return {
             "broadcast": simulate_flooding(overlay, spec, model_mb),

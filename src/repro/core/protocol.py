@@ -16,10 +16,12 @@ import numpy as np
 from .graph import Graph, build_mst, color_graph, slot_length_for_colors
 from .gossip import GossipEngine, fedavg_numpy
 from .moderator import ConnectivityReport, Moderator
+from .plan import CommPolicy, make_policy
 from .schedule import (
     SlotPlan,
     compile_dissemination,
     compile_flooding,
+    compile_segmented,
     compile_tree_allreduce,
 )
 
@@ -29,8 +31,9 @@ class MOSGUConfig:
     mst_algorithm: str = "prim"
     coloring_algorithm: str = "bfs"
     ping_size_bytes: float = 64.0
-    gossip_mode: str = "dissemination"  # dissemination | tree_allreduce
+    gossip_mode: str = "dissemination"  # dissemination | tree_allreduce | segmented
     root: int = 0
+    n_segments: int = 4  # segmented-gossip split factor
 
 
 class MOSGUProtocol:
@@ -64,6 +67,9 @@ class MOSGUProtocol:
         self.colors = color_graph(self.mst, self.config.coloring_algorithm, self.config.root)
         if self.config.gossip_mode == "tree_allreduce":
             self.plan = compile_tree_allreduce(self.mst, self.colors, self.config.root)
+        elif self.config.gossip_mode in ("segmented", "segmented_gossip"):
+            self.plan = compile_segmented(self.mst, self.colors,
+                                          self.config.n_segments)
         else:
             self.plan = compile_dissemination(self.mst, self.colors)
         self.flooding_plan = compile_flooding(self.graph)
@@ -71,6 +77,17 @@ class MOSGUProtocol:
     def slot_length_s(self, model_size_mb: float) -> float:
         return slot_length_for_colors(
             self.graph, self.colors, model_size_mb, self.config.ping_size_bytes
+        )
+
+    def build_policy(self, name: Optional[str] = None) -> CommPolicy:
+        """The configured (or named) protocol as a communication-plan policy."""
+        return make_policy(
+            name or self.config.gossip_mode,
+            self.graph,
+            mst=self.mst,
+            colors=self.colors,
+            n_segments=self.config.n_segments,
+            root=self.config.root,
         )
 
     # -- GU ---------------------------------------------------------------------
@@ -81,8 +98,19 @@ class MOSGUProtocol:
         combine: Callable[[List[Any]], Any] = fedavg_numpy,
         drop_fn: Optional[Callable[[int, int, int], bool]] = None,
     ) -> Dict[str, Any]:
-        """Execute one gossip round with live queues; return stats + aggregates."""
-        engine = GossipEngine(self.mst, self.colors, drop_fn=drop_fn)
+        """Execute one gossip round with live queues; return stats + aggregates.
+
+        Runs the configured gossip mode (dissemination or segmented — for
+        segmented, ``payloads[u]`` must be a list of ``n_segments`` pieces and
+        aggregates come back per segment). ``tree_allreduce`` is a device
+        collective with no store-and-forward queue semantics, so its rounds
+        fall back to dissemination here; its compiled-plan statistics live in
+        ``self.plan`` / :meth:`round_traffic`.
+        """
+        policy = (self.build_policy()
+                  if self.config.gossip_mode in ("segmented", "segmented_gossip")
+                  else None)
+        engine = GossipEngine(self.mst, self.colors, drop_fn=drop_fn, policy=policy)
         n_slots = engine.run_round(round_idx, payloads)
         out: Dict[str, Any] = {
             "n_slots": n_slots,

@@ -1,16 +1,20 @@
-"""MOSGU schedule compiler.
+"""MOSGU schedule compiler — thin wrappers over the communication-plan IR.
 
 The paper's gossip process (Section III-D, Table I) is fully deterministic
 given the MST, the 2-coloring, and FIFO discipline. On TPU we therefore
-*compile* it ahead of time into a static slot plan — a list of time slots,
-each containing the directed sends `(src, dst, payload)` that happen in that
-slot — instead of running dynamic queues on device.
+*compile* it ahead of time into a static slot plan — a :class:`SlotPlan` —
+instead of running dynamic queues on device.
 
-Three plans are produced:
+Since the IR refactor, every protocol is authored exactly once as a policy
+in :mod:`repro.core.plan`; the ``compile_*`` functions here are back-compat
+wrappers that run :func:`repro.core.plan.compile_policy` over the matching
+policy:
 
 * :func:`compile_dissemination` — the paper-faithful plan: every node ends the
   round holding all N models (payload = model owner id). Slot semantics match
-  the runtime queue simulator in :mod:`repro.core.gossip` exactly (tested).
+  the runtime queue engine in :mod:`repro.core.gossip` exactly (tested).
+* :func:`compile_segmented` — segmented gossip (Hu et al.): S segments per
+  model gossiped independently, payload id = owner·S + segment.
 * :func:`compile_tree_allreduce` — beyond-paper: FedAvg only needs the mean,
   so reduce partial sums up the colored MST then broadcast down. Same colored
   slot discipline, O(2·depth) slots, O(1) buffers.
@@ -24,262 +28,60 @@ targets, each slot's send list (a multicast forest) is decomposed into
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Set, Tuple
 
 import numpy as np
 
 from .graph import Graph
-
-# A directed send: (src, dst, payload). For dissemination the payload is the
-# *owner id* of the model being forwarded; for tree plans it is a phase tag.
-Send = Tuple[int, int, int]
-
-
-@dataclass
-class Slot:
-    """One colored time slot."""
-
-    color: int
-    sends: List[Send] = field(default_factory=list)
-
-
-@dataclass
-class SlotPlan:
-    """A compiled communication plan."""
-
-    n: int
-    kind: str  # dissemination | tree_reduce | tree_broadcast | tree_allreduce | flooding
-    slots: List[Slot]
-    colors: np.ndarray  # node colors used for scheduling
-    # For dissemination: queue snapshot after each slot, for testing vs the
-    # runtime simulator / the paper's Table I. queue_trace[t][u] = list of
-    # owner ids in node u's FIFO after slot t.
-    queue_trace: Optional[List[List[List[int]]]] = None
-    # For dissemination: received_trace[t][u] = set of owners u holds.
-    received_trace: Optional[List[List[Set[int]]]] = None
-
-    # -- accounting ---------------------------------------------------------
-    @property
-    def n_slots(self) -> int:
-        return len(self.slots)
-
-    def total_transmissions(self) -> int:
-        return sum(len(s.sends) for s in self.slots)
-
-    def max_concurrent_sends(self) -> int:
-        return max((len(s.sends) for s in self.slots), default=0)
-
-    def bytes_on_wire(self, model_bytes: float) -> float:
-        """Total bytes crossing links for one communication round."""
-        return self.total_transmissions() * model_bytes
-
-    def max_queue_depth(self) -> int:
-        if not self.queue_trace:
-            return 1
-        return max(len(q) for snap in self.queue_trace for q in snap)
+from .plan import (  # noqa: F401  (re-exported for back-compat)
+    DisseminationPolicy,
+    FloodingPolicy,
+    SegmentedGossipPolicy,
+    Send,
+    Slot,
+    SlotPlan,
+    TreeAllreducePolicy,
+    compile_policy,
+)
 
 
 # ---------------------------------------------------------------------------
-# Paper-faithful full dissemination
+# Policy compilation wrappers
 # ---------------------------------------------------------------------------
 
 
 def compile_dissemination(
     mst: Graph, colors: np.ndarray, first_color: int = 0, max_slots: int = 100_000
 ) -> SlotPlan:
-    """Compile the paper's FIFO gossip into a static slot plan.
-
-    Per slot (alternating colors), every node of the active color with a
-    non-empty FIFO pops its *oldest* entry and multicasts it to all MST
-    neighbours except the one it received it from (its own model goes to all
-    neighbours). Degree-1 nodes never enqueue received models (paper III-D).
-    """
-    n = mst.n
-    colors = np.asarray(colors)
-    neighbors = {u: mst.neighbors(u) for u in range(n)}
-    # FIFO entries: (owner, predecessor or -1 for own model)
-    fifo: List[List[Tuple[int, int]]] = [[(u, -1)] if neighbors[u] else [] for u in range(n)]
-    received: List[Set[int]] = [{u} for u in range(n)]
-
-    slots: List[Slot] = []
-    queue_trace: List[List[List[int]]] = []
-    received_trace: List[List[Set[int]]] = []
-
-    def done() -> bool:
-        return all(len(r) == n for r in received) and all(not q for q in fifo)
-
-    color_cycle = sorted(set(int(c) for c in colors))
-    if first_color in color_cycle:
-        i0 = color_cycle.index(first_color)
-        color_cycle = color_cycle[i0:] + color_cycle[:i0]
-
-    t = 0
-    while not done():
-        if t >= max_slots:
-            raise RuntimeError("dissemination did not converge — MST/coloring invalid?")
-        color = color_cycle[t % len(color_cycle)]
-        slot = Slot(color=color)
-        # collect sends first (all same-color nodes act simultaneously)
-        deliveries: List[Tuple[int, int, int]] = []  # (dst, owner, src)
-        for u in range(n):
-            if int(colors[u]) != color or not fifo[u]:
-                continue
-            owner, pred = fifo[u].pop(0)
-            for v in neighbors[u]:
-                if v == pred:
-                    continue
-                slot.sends.append((u, v, owner))
-                deliveries.append((v, owner, u))
-        # apply deliveries after the slot (receivers act next slot at earliest)
-        for dst, owner, src in deliveries:
-            if owner in received[dst]:
-                continue  # duplicate — cannot happen on a tree, kept for safety
-            received[dst].add(owner)
-            if len(neighbors[dst]) > 1:  # degree-1 nodes never forward (III-D)
-                fifo[dst].append((owner, src))
-        slots.append(slot)
-        queue_trace.append([[o for (o, _) in fifo[u]] for u in range(n)])
-        received_trace.append([set(r) for r in received])
-        t += 1
-
-    return SlotPlan(
-        n=n,
-        kind="dissemination",
-        slots=slots,
-        colors=colors,
-        queue_trace=queue_trace,
-        received_trace=received_trace,
-    )
+    """Compile the paper's FIFO gossip into a static slot plan."""
+    return compile_policy(DisseminationPolicy(mst, colors, first_color),
+                          max_slots=max_slots)
 
 
-# ---------------------------------------------------------------------------
-# Beyond-paper: tree all-reduce on the colored MST
-# ---------------------------------------------------------------------------
-
-
-def _tree_structure(mst: Graph, root: int) -> Tuple[Dict[int, int], Dict[int, List[int]], Dict[int, int]]:
-    """Return (parent, children, depth) maps of the MST rooted at ``root``."""
-    parent: Dict[int, int] = {root: -1}
-    children: Dict[int, List[int]] = {u: [] for u in range(mst.n)}
-    depth: Dict[int, int] = {root: 0}
-    stack = [root]
-    while stack:
-        u = stack.pop()
-        for v in mst.neighbors(u):
-            if v not in parent:
-                parent[v] = u
-                children[u].append(v)
-                depth[v] = depth[u] + 1
-                stack.append(v)
-    return parent, children, depth
+def compile_segmented(
+    mst: Graph, colors: np.ndarray, n_segments: int = 4,
+    first_color: int = 0, max_slots: int = 100_000,
+) -> SlotPlan:
+    """Compile segmented gossip: S per-model segments gossiped independently."""
+    return compile_policy(
+        SegmentedGossipPolicy(mst, colors, segments=n_segments,
+                              first_color=first_color),
+        max_slots=max_slots)
 
 
 def compile_tree_allreduce(
     mst: Graph, colors: np.ndarray, root: int = 0, max_slots: int = 100_000
 ) -> SlotPlan:
-    """Reduce partial sums to the root, then broadcast the mean back down.
-
-    Respects the paper's colored slot discipline: a node transmits only in
-    slots of its own color. Payload tags: 0 = partial sum (reduce phase),
-    1 = aggregated mean (broadcast phase).
-    """
-    n = mst.n
-    colors = np.asarray(colors)
-    parent, children, _ = _tree_structure(mst, root)
-
-    pending_children = {u: set(children[u]) for u in range(n)}
-    sent_up = {u: False for u in range(n)}
-    sent_up[root] = True  # root never sends up
-    slots: List[Slot] = []
-    color_cycle = sorted(set(int(c) for c in colors))
-    t = 0
-    # ---- reduce phase ----
-    while not all(sent_up.values()):
-        if t >= max_slots:
-            raise RuntimeError("tree reduce did not converge")
-        color = color_cycle[t % len(color_cycle)]
-        slot = Slot(color=color)
-        acted = []
-        for u in range(n):
-            if u == root or sent_up[u] or int(colors[u]) != color:
-                continue
-            if pending_children[u]:
-                continue  # wait for all children's partials
-            slot.sends.append((u, parent[u], 0))
-            acted.append(u)
-        for u in acted:
-            sent_up[u] = True
-            pending_children[parent[u]].discard(u)
-        slots.append(slot)
-        t += 1
-    n_reduce = len(slots)
-    # ---- broadcast phase ----
-    has_mean = {u: u == root for u in range(n)}
-    forwarded = {u: not children[u] for u in range(n)}
-    while not all(forwarded.values()):
-        if t >= max_slots:
-            raise RuntimeError("tree broadcast did not converge")
-        color = color_cycle[t % len(color_cycle)]
-        slot = Slot(color=color)
-        acted = []
-        for u in range(n):
-            if forwarded[u] or int(colors[u]) != color or not has_mean[u]:
-                continue
-            for v in children[u]:
-                slot.sends.append((u, v, 1))
-            acted.append(u)
-        for u in acted:
-            forwarded[u] = True
-            for v in children[u]:
-                has_mean[v] = True
-        slots.append(slot)
-        t += 1
-
-    plan = SlotPlan(n=n, kind="tree_allreduce", slots=slots, colors=colors)
-    plan.n_reduce_slots = n_reduce  # type: ignore[attr-defined]
-    plan.parent = parent  # type: ignore[attr-defined]
-    plan.children = children  # type: ignore[attr-defined]
-    plan.root = root  # type: ignore[attr-defined]
-    return plan
-
-
-# ---------------------------------------------------------------------------
-# Baseline: flooding broadcast on the overlay graph
-# ---------------------------------------------------------------------------
+    """Reduce partial sums to the root, then broadcast the mean back down."""
+    return compile_policy(TreeAllreducePolicy(mst, colors, root),
+                          max_slots=max_slots)
 
 
 def compile_flooding(overlay: Graph, max_rounds: int = 10_000) -> SlotPlan:
-    """Naive flooding: each round, every node forwards every *new* model it
-    holds to all overlay neighbours — concurrently, with no schedule. All
-    sends of a round land in one slot (that is the point: maximal link
-    contention), and duplicate deliveries are counted as real transmissions.
-    """
-    n = overlay.n
-    neighbors = {u: overlay.neighbors(u) for u in range(n)}
-    received: List[Set[int]] = [{u} for u in range(n)]
-    fresh: List[Set[int]] = [{u} for u in range(n)]
-    slots: List[Slot] = []
-    r = 0
-    while any(fresh[u] for u in range(n)):
-        if r >= max_rounds:
-            raise RuntimeError("flooding did not converge — disconnected overlay?")
-        slot = Slot(color=-1)
-        deliveries: List[Tuple[int, int]] = []
-        for u in range(n):
-            for owner in sorted(fresh[u]):
-                for v in neighbors[u]:
-                    slot.sends.append((u, v, owner))  # duplicates included
-                    deliveries.append((v, owner))
-        for u in range(n):
-            fresh[u] = set()
-        for dst, owner in deliveries:
-            if owner not in received[dst]:
-                received[dst].add(owner)
-                fresh[dst].add(owner)
-        slots.append(slot)
-        r += 1
-    return SlotPlan(n=n, kind="flooding", slots=slots, colors=-np.ones(n, dtype=np.int64))
+    """Naive flooding, rounds-synchronous: all of a round's sends land in one
+    slot (that is the point: maximal link contention)."""
+    return compile_policy(FloodingPolicy(overlay), max_slots=max_rounds)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,9 @@ Modes (DESIGN.md §6):
   * dissemination  — paper-faithful: every node ends the round holding all N
                      models in a (N, …) buffer, then aggregates (FedAvg).
                      O(N·|θ|) memory; lowered for small archs.
+  * segmented      — segmented gossip (Hu et al.): each model is split into S
+                     segments gossiped independently; buffer has N·S segment
+                     slots, S× the permute steps at 1/S the payload each.
   * tree_allreduce — beyond-paper: reduce partial sums up the colored MST and
                      broadcast the mean down. Produces *exactly* the FedAvg
                      mean the paper's round produces (tested), with O(2·depth)
@@ -20,10 +23,14 @@ Modes (DESIGN.md §6):
                      naive broadcast round computes).
   * allreduce_ref  — reference: XLA's native psum (the centralized-collective
                      upper bound MOSGU is compared against).
+
+All compiled modes consume the same communication-plan IR
+(:mod:`repro.core.plan`): a policy is compiled once into a ``SlotPlan`` and
+lowered here via ``plan_to_perm_steps``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -33,6 +40,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.graph import Graph, build_mst, color_graph
+from ..core.plan import SegmentedGossipPolicy, compile_policy
 from ..core.schedule import (
     PermStep,
     SlotPlan,
@@ -43,6 +51,17 @@ from ..core.schedule import (
 )
 
 PyTree = Any
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map moved between releases; accept both spellings."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -86,15 +105,29 @@ class GossipPlan:
     tree_steps: List[PermStep]
     n_tree_reduce_steps: int
     mixing_matchings: List[List[Tuple[int, int]]]
+    # segmented gossip (model split into n_segments independently gossiped
+    # pieces); compiled from the same IR policy as the host-side executors
+    segmented: Optional[SlotPlan] = None
+    seg_steps: List[PermStep] = field(default_factory=list)
+    n_segments: int = 1
+    # Physical node id -> buffer row (= plan-payload owner id). None means
+    # identity (full membership). Under churn the compiled plans index
+    # payloads by *subgraph* position, so masked meshes need this remap
+    # (-1 = node outside the healthy subgraph).
+    node_slot: Optional[np.ndarray] = None
 
     @classmethod
-    def build(cls, mesh: Mesh, node_axes: Sequence[str]) -> "GossipPlan":
+    def build(cls, mesh: Mesh, node_axes: Sequence[str],
+              n_segments: int = 4) -> "GossipPlan":
         node_axes = tuple(a for a in node_axes if a in mesh.shape)
         g = make_node_graph(mesh, node_axes)
         mst = build_mst(g, "prim")
         colors = color_graph(mst, "bfs")
         diss = compile_dissemination(mst, colors)
         tree = compile_tree_allreduce(mst, colors)
+        seg = compile_policy(
+            SegmentedGossipPolicy(mst, colors, segments=n_segments),
+            record_traces=False) if g.n > 1 else None
         # count perm steps belonging to the reduce phase
         n_red_slots = tree.n_reduce_slots  # type: ignore[attr-defined]
         red_steps = sum(
@@ -115,13 +148,22 @@ class GossipPlan:
             tree_steps=plan_to_perm_steps(tree),
             n_tree_reduce_steps=red_steps,
             mixing_matchings=[[(u, v) for u, v, _ in m] for m in matchings],
+            segmented=seg,
+            seg_steps=plan_to_perm_steps(seg) if seg is not None else [],
+            n_segments=n_segments,
         )
+
+
+def _axis_size(a) -> jax.Array:
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(jnp.ones((), jnp.int32), a)  # pre-0.5 jax
 
 
 def _node_index(node_axes: Sequence[str]) -> jax.Array:
     idx = jnp.zeros((), jnp.int32)
     for a in node_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -179,20 +221,14 @@ def _tree_allreduce_body(plan: GossipPlan, theta: PyTree,
     return jax.tree.map(lambda v, t: (v / plan.n_nodes).astype(t.dtype), val, theta)
 
 
-def _dissemination_body(plan: GossipPlan, theta: PyTree) -> Tuple[PyTree, PyTree]:
-    """Paper-faithful full dissemination. Returns (fedavg_mean, buffer)."""
-    if plan.n_nodes == 1:
-        return theta, jax.tree.map(lambda t: t[None], theta)
-    ax = _axis_name(plan.node_axes)
-    nid = _node_index(plan.node_axes)
-    n = plan.n_nodes
+def _apply_perm_steps(steps: Sequence[PermStep], buf: PyTree, ax, nid) -> PyTree:
+    """Run a compiled plan's ppermute steps over a slot-indexed buffer tree.
 
-    def init_buf(t):
-        buf = jnp.zeros((n, *t.shape), t.dtype)
-        return jax.lax.dynamic_update_index_in_dim(buf, t, nid, 0)
-
-    buf = jax.tree.map(init_buf, theta)
-    for step in plan.diss_steps:
+    Each leaf's leading dimension is the logical payload-slot axis the
+    ``PermStep`` send/recv payload ids index into. Shared by every
+    buffer-dissemination mode (dissemination, segmented, flooding plans).
+    """
+    for step in steps:
         send_idx = jnp.take(jnp.asarray(step.send_payload), nid)
         recv_idx = jnp.take(jnp.asarray(step.recv_payload), nid)
 
@@ -205,9 +241,76 @@ def _dissemination_body(plan: GossipPlan, theta: PyTree) -> Tuple[PyTree, PyTree
             return jnp.where(recv_idx >= 0, updated, b)
 
         buf = jax.tree.map(one, buf)
+    return buf
+
+
+def _buffer_row(plan: GossipPlan, nid) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """This node's buffer row (its owner id in the compiled plan's payload
+    space) and, under churn masking, its membership predicate."""
+    if plan.node_slot is None:
+        return nid, None
+    row = jnp.take(jnp.asarray(plan.node_slot, dtype=np.int32), nid)
+    return jnp.maximum(row, 0), row >= 0
+
+
+def _dissemination_body(plan: GossipPlan, theta: PyTree) -> Tuple[PyTree, PyTree]:
+    """Paper-faithful full dissemination. Returns (fedavg_mean, buffer)."""
+    if plan.n_nodes == 1:
+        return theta, jax.tree.map(lambda t: t[None], theta)
+    ax = _axis_name(plan.node_axes)
+    nid = _node_index(plan.node_axes)
+    row, is_member = _buffer_row(plan, nid)
+    n = plan.n_nodes
+
+    def init_buf(t):
+        buf = jnp.zeros((n, *t.shape), t.dtype)
+        return jax.lax.dynamic_update_index_in_dim(buf, t, row, 0)
+
+    buf = jax.tree.map(init_buf, theta)
+    buf = _apply_perm_steps(plan.diss_steps, buf, ax, nid)
     mean = jax.tree.map(
         lambda b, t: jnp.mean(b.astype(jnp.float32), axis=0).astype(t.dtype), buf, theta)
+    if is_member is not None:  # masked nodes keep their local params
+        mean = jax.tree.map(lambda m, t: jnp.where(is_member, m, t), mean, theta)
     return mean, buf
+
+
+def _segmented_body(plan: GossipPlan, theta: PyTree) -> PyTree:
+    """Segmented gossip: each leaf is split into S flat segments; the buffer
+    holds N·S segment slots (slot k = owner k//S, segment k%S) and the
+    compiled segmented plan moves one segment per transfer. After full
+    dissemination every node reassembles all N models and takes the mean."""
+    if plan.n_nodes == 1:
+        return theta
+    ax = _axis_name(plan.node_axes)
+    nid = _node_index(plan.node_axes)
+    row, is_member = _buffer_row(plan, nid)
+    n, S = plan.n_nodes, plan.n_segments
+
+    def split(t):
+        flat = t.reshape(-1)
+        pad = (-flat.shape[0]) % S
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(S, -1)
+
+    def init_buf(t):
+        segs = split(t)  # (S, L)
+        buf = jnp.zeros((n * S, segs.shape[1]), segs.dtype)
+        return jax.lax.dynamic_update_slice(buf, segs, (row * S, 0))
+
+    buf = jax.tree.map(init_buf, theta)
+    buf = _apply_perm_steps(plan.seg_steps, buf, ax, nid)
+
+    def reassemble_mean(b, t):
+        models = b.reshape(n, S * b.shape[1])[:, : t.size]  # (N, |t|)
+        mean = jnp.mean(models.astype(jnp.float32), axis=0)
+        return mean.reshape(t.shape).astype(t.dtype)
+
+    out = jax.tree.map(reassemble_mean, buf, theta)
+    if is_member is not None:  # masked nodes keep their local params
+        out = jax.tree.map(lambda m, t: jnp.where(is_member, m, t), out, theta)
+    return out
 
 
 def _mixing_body(plan: GossipPlan, theta: PyTree, lam: float = 1.0) -> PyTree:
@@ -258,6 +361,7 @@ def _allreduce_ref_body(plan: GossipPlan, theta: PyTree) -> PyTree:
 GOSSIP_BODIES: Dict[str, Callable] = {
     "tree_allreduce": _tree_allreduce_body,
     "dissemination": lambda plan, theta: _dissemination_body(plan, theta)[0],
+    "segmented": _segmented_body,
     "mixing": _mixing_body,
     "flooding": _flooding_body,
     "allreduce_ref": _allreduce_ref_body,
@@ -284,13 +388,7 @@ def gossip_exchange(
         body = partial(_tree_allreduce_body, plan, wire_dtype=wire_dtype)
     else:
         body = partial(GOSSIP_BODIES[mode], plan)
-    fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(param_specs,),
-        out_specs=param_specs,
-        check_vma=False,
-    )
+    fn = _shard_map(body, mesh, (param_specs,), param_specs)
     return fn(params)
 
 
@@ -300,6 +398,11 @@ def gossip_collective_bytes(mode: str, plan: GossipPlan, param_bytes: int) -> fl
         return 0.0
     if mode == "dissemination":
         return plan.dissemination.total_transmissions() * param_bytes
+    if mode == "segmented":
+        if plan.segmented is None:
+            return plan.dissemination.total_transmissions() * param_bytes
+        # S× the transfers at 1/S the bytes each: same total as dissemination
+        return plan.segmented.bytes_on_wire(param_bytes)
     if mode == "tree_allreduce":
         return plan.tree.total_transmissions() * param_bytes
     if mode == "mixing":

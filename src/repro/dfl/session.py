@@ -29,12 +29,14 @@ import numpy as np
 
 from ..core.graph import Graph, build_mst, color_graph
 from ..core.moderator import ConnectivityReport, Moderator
+from ..core.plan import SegmentedGossipPolicy, compile_policy
 from ..core.schedule import compile_dissemination, compile_tree_allreduce, decompose_matchings, plan_to_perm_steps
 from .collectives import GossipPlan, make_node_graph
 from .trainer import DFLConfig, DFLTrainer
 
 
-def _plan_for_members(mesh, node_axes, members: Set[int]) -> GossipPlan:
+def _plan_for_members(mesh, node_axes, members: Set[int],
+                      n_segments: int = 4) -> GossipPlan:
     """GossipPlan over a *subset* of mesh nodes (churn masking).
 
     The MST/coloring runs on the healthy subgraph; perms are then relabelled
@@ -56,16 +58,31 @@ def _plan_for_members(mesh, node_axes, members: Set[int]) -> GossipPlan:
     colors_phys = -np.ones(n_phys, dtype=np.int64)
     for i, nid in enumerate(members_sorted):
         colors_phys[nid] = colors_sub[i]
+    # compiled plans index payloads by subgraph position; buffer bodies need
+    # the physical-id -> subgraph-row map (-1 = masked out of the round)
+    node_slot = -np.ones(n_phys, dtype=np.int32)
+    for i, nid in enumerate(members_sorted):
+        node_slot[nid] = i
 
-    # compile plans over the subgraph, then relabel slot sends
+    # compile plans over the subgraph, then relabel slot endpoints to physical
+    # node ids (payload ids stay subgraph-indexed — the buffer-row space; see
+    # GossipPlan.node_slot). Re-homing plan.n to the physical axis makes the
+    # lowered PermStep arrays physical-id indexed, as ppermute requires.
     def relabel(plan):
         for slot in plan.slots:
             slot.sends = [(members_sorted[s], members_sorted[d], p)
                           for (s, d, p) in slot.sends]
+        plan.n = n_phys
+        plan.colors = colors_phys
         return plan
 
     diss = relabel(compile_dissemination(mst_sub, colors_sub))
     tree = relabel(compile_tree_allreduce(mst_sub, colors_sub))
+    seg = None
+    if mst_sub.n > 1:
+        seg = relabel(compile_policy(
+            SegmentedGossipPolicy(mst_sub, colors_sub, segments=n_segments),
+            record_traces=False))
     n_red_slots = tree.n_reduce_slots  # type: ignore[attr-defined]
     red_steps = sum(
         len([m for m in decompose_matchings(s.sends) if m])
@@ -84,6 +101,10 @@ def _plan_for_members(mesh, node_axes, members: Set[int]) -> GossipPlan:
         tree_steps=plan_to_perm_steps(tree),
         n_tree_reduce_steps=red_steps,
         mixing_matchings=[[(u, v) for u, v, _ in m] for m in matchings],
+        segmented=seg,
+        seg_steps=plan_to_perm_steps(seg) if seg is not None else [],
+        n_segments=n_segments,
+        node_slot=node_slot,
     )
     # ppermute still runs over the FULL physical axis; masked nodes simply
     # never appear as sources/targets, and the mean divides by len(members):

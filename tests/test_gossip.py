@@ -1,6 +1,8 @@
 """Gossip semantics: compiled plans vs the runtime queue engine (Table I)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional dev extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.gossip import GossipEngine, fedavg_numpy

@@ -1,6 +1,8 @@
 """Graph substrate: MST algorithms, colorings, slot length, topologies."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional dev extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import (

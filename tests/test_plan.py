@@ -1,0 +1,289 @@
+"""Communication-plan IR: one policy definition, three agreeing executors.
+
+These tests pin the tentpole property of the architecture: flooding, MOSGU
+dissemination, tree all-reduce, and segmented gossip are each authored once
+(as policies in repro.core.plan) and every executor — the reference compiler,
+the runtime queue engine, the fluid network simulator, and the ppermute
+lowering — interprets the same IR, so their traces must agree exactly.
+No hypothesis dependency: seeded topology sweeps only.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.gossip import GossipEngine
+from repro.core.graph import Graph, TopologySpec, build_mst, color_graph, make_topology
+from repro.core.netsim import TestbedSpec, compare_protocols, simulate_policy
+from repro.core.plan import (
+    DisseminationPolicy,
+    FloodingPolicy,
+    ReplayPolicy,
+    SegmentedGossipPolicy,
+    TreeAllreducePolicy,
+    compile_policy,
+    make_policy,
+    measure_policy,
+)
+from repro.core.schedule import (
+    compile_dissemination,
+    compile_flooding,
+    compile_segmented,
+    compile_tree_allreduce,
+    plan_to_perm_steps,
+)
+
+TOPOLOGIES = ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert")
+SETUPS = [(kind, n, seed) for kind in TOPOLOGIES for n, seed in ((4, 0), (10, 3), (13, 7))]
+
+
+def _setup(kind, n, seed):
+    g = make_topology(TopologySpec(kind=kind, n=n, seed=seed))
+    mst = build_mst(g)
+    colors = color_graph(mst)
+    return g, mst, colors
+
+
+class TestCrossExecutorEquivalence:
+    """Queue engine vs. compiled plan vs. netsim replay, per protocol."""
+
+    @pytest.mark.parametrize("kind,n,seed", SETUPS)
+    def test_dissemination_engine_matches_compiled(self, kind, n, seed):
+        g, mst, colors = _setup(kind, n, seed)
+        plan = compile_policy(DisseminationPolicy(mst, colors))
+        eng = GossipEngine(mst, colors)
+        eng.begin_round(0)
+        for t, slot in enumerate(plan.slots):
+            rep = eng.step()
+            assert rep.sends == slot.sends, f"slot {t}"
+            assert eng.queue_snapshot() == plan.queue_trace[t], f"slot {t}"
+        assert eng.is_round_complete()
+        assert plan.total_transmissions() == n * (n - 1)
+
+    @pytest.mark.parametrize("kind,n,seed", SETUPS[:6])
+    def test_dissemination_netsim_matches_compiled(self, kind, n, seed):
+        """The fluid simulator launches exactly the compiled plan's slots —
+        whether it interprets the live policy or replays the SlotPlan."""
+        g, mst, colors = _setup(kind, n, seed)
+        plan = compile_policy(DisseminationPolicy(mst, colors))
+        spec = TestbedSpec(n=n)
+        live = simulate_policy(DisseminationPolicy(mst, colors), spec, 5.0,
+                               record_trace=True)
+        replay = simulate_policy(ReplayPolicy(plan), spec, 5.0, record_trace=True)
+        expected = [slot.sends for slot in plan.slots]
+        assert live.send_trace == expected
+        assert replay.send_trace == expected
+        assert live.total_time_s == pytest.approx(replay.total_time_s)
+
+    @pytest.mark.parametrize("kind,n,seed", SETUPS[:6])
+    def test_tree_allreduce_engine_matches_compiled(self, kind, n, seed):
+        g, mst, colors = _setup(kind, n, seed)
+        plan = compile_tree_allreduce(mst, colors)
+        eng = GossipEngine(policy=TreeAllreducePolicy(mst, colors))
+        eng.begin_round(0)
+        for t, slot in enumerate(plan.slots):
+            rep = eng.step()
+            assert rep.sends == slot.sends, f"slot {t}"
+        assert eng.is_round_complete()
+        assert plan.total_transmissions() == 2 * (n - 1)
+
+    @pytest.mark.parametrize("kind,n,seed", SETUPS[:6])
+    def test_flooding_slot_engine_matches_compiled(self, kind, n, seed):
+        g, _, _ = _setup(kind, n, seed)
+        plan = compile_flooding(g)
+        eng = GossipEngine(policy=FloodingPolicy(g))
+        eng.begin_round(0)
+        for t, slot in enumerate(plan.slots):
+            rep = eng.step()
+            assert rep.sends == slot.sends, f"slot {t}"
+        assert eng.is_round_complete()
+
+    @pytest.mark.parametrize("kind,n,seed", SETUPS[:6])
+    def test_flooding_event_mode_same_transmissions(self, kind, n, seed):
+        """Event-driven flooding (netsim) forwards each model exactly once per
+        node, so its transfer multiset equals the rounds-synchronous plan's."""
+        g, _, _ = _setup(kind, n, seed)
+        plan = compile_flooding(g)
+        res = simulate_policy(FloodingPolicy(g), TestbedSpec(n=n), 5.0,
+                              record_trace=True)
+        event_sends = sorted(s for batch in res.send_trace for s in batch)
+        plan_sends = sorted(s for slot in plan.slots for s in slot.sends)
+        assert event_sends == plan_sends
+
+    @pytest.mark.parametrize("kind,n,seed", SETUPS)
+    def test_segmented_engine_matches_compiled(self, kind, n, seed):
+        g, mst, colors = _setup(kind, n, seed)
+        plan = compile_segmented(mst, colors, n_segments=3)
+        eng = GossipEngine(policy=SegmentedGossipPolicy(mst, colors, segments=3))
+        eng.begin_round(0)
+        for t, slot in enumerate(plan.slots):
+            rep = eng.step()
+            assert rep.sends == slot.sends, f"slot {t}"
+        assert eng.is_round_complete()
+
+
+class TestSegmentedGossip:
+    @pytest.mark.parametrize("kind,n,seed", SETUPS)
+    @pytest.mark.parametrize("S", (2, 4))
+    def test_full_dissemination_of_all_segments(self, kind, n, seed, S):
+        g, mst, colors = _setup(kind, n, seed)
+        plan = compile_segmented(mst, colors, n_segments=S)
+        # every node ends holding all N*S segments
+        assert all(len(r) == n * S for r in plan.received_trace[-1])
+        # each segment crosses each of the N-1 tree edges exactly once
+        assert plan.total_transmissions() == S * n * (n - 1)
+        # same total bytes as unsegmented dissemination
+        diss = compile_dissemination(mst, colors)
+        assert plan.bytes_on_wire(1.0) == pytest.approx(diss.bytes_on_wire(1.0))
+
+    def test_segment_pipeline_needs_no_fewer_slots(self):
+        g, mst, colors = _setup("complete", 10, 3)
+        diss = compile_dissemination(mst, colors)
+        seg = compile_segmented(mst, colors, n_segments=4)
+        assert seg.n_slots >= diss.n_slots
+
+    def test_slot_discipline_respected(self):
+        g, mst, colors = _setup("erdos_renyi", 10, 1)
+        plan = compile_segmented(mst, colors, n_segments=3)
+        for slot in plan.slots:
+            senders = {src for src, _, _ in slot.sends}
+            assert all(colors[s] == slot.color for s in senders)
+            receivers = {dst for _, dst, _ in slot.sends}
+            assert not senders & receivers
+
+    def test_perm_steps_cover_segmented_plan(self):
+        """The JAX lowering consumes the segmented plan unchanged."""
+        g, mst, colors = _setup("watts_strogatz", 10, 2)
+        plan = compile_segmented(mst, colors, n_segments=3)
+        steps = plan_to_perm_steps(plan)
+        assert sum(len(s.perm) for s in steps) == plan.total_transmissions()
+        for s in steps:
+            srcs = [a for a, _ in s.perm]
+            dsts = [b for _, b in s.perm]
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+
+    def test_netsim_segmented_transfer_count_and_size(self):
+        r = compare_protocols("complete", 14.0, seed=0,
+                              protocols=("mosgu", "segmented"), n_segments=4)
+        assert r["mosgu"].n_transfers == 90
+        assert r["segmented"].n_transfers == 4 * 90
+        # four times the transfers at a quarter the size: per-transfer time
+        # must be shorter than whole-model transfers
+        assert r["segmented"].mean_transfer_s < r["mosgu"].mean_transfer_s
+
+
+class TestProtocolRegistry:
+    def test_all_protocols_run_on_all_executors(self):
+        """The acceptance matrix: four protocols × three executors."""
+        g, mst, colors = _setup("erdos_renyi", 8, 5)
+        spec = TestbedSpec(n=8)
+        for name in ("flooding", "dissemination", "tree_allreduce", "segmented"):
+            plan = compile_policy(make_policy(name, g))       # reference compiler
+            eng = GossipEngine(policy=make_policy(name, g))   # queue engine
+            eng.run_round(0)
+            sim = simulate_policy(make_policy(name, g), spec, 5.0)  # fluid netsim
+            steps = plan_to_perm_steps(plan)                  # JAX lowering
+            engine_tx = sum(len(rep.sends) for rep in eng.reports)
+            assert engine_tx == plan.total_transmissions(), name
+            assert sim.n_transfers == plan.total_transmissions(), name
+            assert sum(len(s.perm) for s in steps) == plan.total_transmissions(), name
+
+    def test_unknown_protocol_raises(self):
+        g, _, _ = _setup("complete", 5, 0)
+        with pytest.raises(ValueError, match="unknown protocol"):
+            make_policy("carrier-pigeon", g)
+
+
+class TestEngineRuntimeSemantics:
+    def test_retransmission_after_drop(self):
+        """A dropped transfer stays in F and is retransmitted (paper III-D)."""
+        mst = Graph.from_edges(2, [(0, 1, 1.0)])
+        colors = color_graph(mst)
+        dropped = {"done": False}
+
+        def drop_fn(slot, src, dst):
+            if src == 0 and not dropped["done"]:
+                dropped["done"] = True
+                return True
+            return False
+
+        eng = GossipEngine(mst, colors, drop_fn=drop_fn)
+        eng.run_round(0)
+        assert dropped["done"]
+        assert all(len(nd.received) == 2 for nd in eng.nodes)
+        assert sum(len(r.dropped) for r in eng.reports) == 1
+
+    def test_partial_drop_keeps_entry_and_redelivers_without_duplicates(self):
+        # star: node 1 multicasts to 0, 2, 3; drop only the 1->2 leg once
+        mst = Graph.from_edges(4, [(0, 1, 1.0), (1, 2, 1.0), (1, 3, 1.0)])
+        colors = color_graph(mst)
+        state = {"dropped": False}
+
+        def drop_fn(slot, src, dst):
+            if (src, dst) == (1, 2) and not state["dropped"]:
+                state["dropped"] = True
+                return True
+            return False
+
+        eng = GossipEngine(mst, colors, drop_fn=drop_fn)
+        eng.run_round(0)
+        assert all(len(nd.received) == 4 for nd in eng.nodes)
+        # each payload delivered at most once despite the retransmission
+        for nd in eng.nodes:
+            assert sorted(nd.received) == [0, 1, 2, 3]
+
+    def test_segmented_round_through_protocol_facade(self):
+        from repro.core.protocol import MOSGUConfig, MOSGUProtocol
+
+        g = make_topology(TopologySpec(kind="complete", n=6, seed=0))
+        proto = MOSGUProtocol(g, MOSGUConfig(gossip_mode="segmented", n_segments=2))
+        payloads = [[np.full(3, float(u)), np.full(3, float(u) + 0.5)]
+                    for u in range(6)]
+        out = proto.run_round(0, payloads)
+        # run_round stats agree with the compiled segmented plan
+        assert out["transmissions"] == proto.plan.total_transmissions() == 2 * 6 * 5
+        assert out["n_slots"] == proto.plan.n_slots
+        # per-segment FedAvg: segment 0 averages u, segment 1 averages u+0.5
+        for segs in out["aggregates"]:
+            np.testing.assert_allclose(segs[0], np.mean(range(6)))
+            np.testing.assert_allclose(segs[1], np.mean(range(6)) + 0.5)
+
+    def test_segmented_payload_transport(self):
+        mst = Graph.from_edges(3, [(0, 1, 1.0), (1, 2, 1.0)])
+        colors = color_graph(mst)
+        eng = GossipEngine(policy=SegmentedGossipPolicy(mst, colors, segments=2))
+        payloads = [[np.full(2, 10.0 * u), np.full(2, 10.0 * u + 1)] for u in range(3)]
+        eng.run_round(0, payloads)
+        for nd in eng.nodes:
+            assert len(nd.received) == 6
+            for u in range(3):
+                np.testing.assert_allclose(nd.received[2 * u].payload, 10.0 * u)
+                np.testing.assert_allclose(nd.received[2 * u + 1].payload, 10.0 * u + 1)
+
+
+class TestVectorizedScale:
+    def test_thousand_node_mosgu_under_10s(self):
+        """Acceptance: a 1000-node MOSGU simulation in under 10 seconds.
+
+        The vectorized slot advance (node-indexed numpy arrays) carries the
+        paper's 10-node protocol to topology-sweep scale."""
+        n = 1000
+        g = make_topology(TopologySpec(kind="watts_strogatz", n=n, seed=1))
+        mst = build_mst(g)
+        colors = color_graph(mst)
+        t0 = time.monotonic()
+        policy = DisseminationPolicy(mst, colors)
+        stats = measure_policy(policy)
+        elapsed = time.monotonic() - t0
+        assert stats["transmissions"] == n * (n - 1)
+        assert all(len(r) == n for r in policy.received_snapshot())
+        assert elapsed < 10.0, f"1000-node round took {elapsed:.1f}s"
+
+    def test_measure_matches_compile_counts(self):
+        g, mst, colors = _setup("barabasi_albert", 12, 9)
+        plan = compile_dissemination(mst, colors)
+        stats = measure_policy(DisseminationPolicy(mst, colors))
+        assert stats["n_slots"] == plan.n_slots
+        assert stats["transmissions"] == plan.total_transmissions()
+        assert stats["max_concurrent_sends"] == plan.max_concurrent_sends()

@@ -59,6 +59,33 @@ def test_session_rounds_with_churn():
     assert losses[-1] < losses[0]  # still learning through churn
 
 
+def test_noncontiguous_membership_all_buffer_modes():
+    """Churn that leaves a hole in the id space (node 1 of {0,1,2,3} fails):
+    payload ids are subgraph-indexed while ppermute addresses physical nodes,
+    so the buffer bodies must remap through GossipPlan.node_slot."""
+    out = run_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        from repro.dfl.collectives import gossip_exchange
+        from repro.dfl.session import _plan_for_members
+        plan = _plan_for_members(mesh, ("data",), {0, 2, 3})  # node 1 masked
+        w = np.arange(8, dtype=np.float32).reshape(4, 2)
+        theta = {"w": jax.device_put(jnp.asarray(w),
+                                     NamedSharding(mesh, P("data", "model")))}
+        specs = {"w": P("data", "model")}
+        healthy = w[[0, 2, 3]].mean(axis=0)
+        ok = True
+        for mode in ("dissemination", "segmented", "tree_allreduce"):
+            res = np.asarray(jax.jit(lambda t: gossip_exchange(
+                mode, plan, mesh, t, specs))(theta)["w"])
+            ok &= np.allclose(res[[0, 2, 3]], healthy, atol=1e-5)
+            ok &= np.allclose(res[1], w[1], atol=1e-6)
+        print("OK", ok)
+    """)
+    assert out.strip().endswith("True")
+
+
 def test_masked_nodes_keep_local_params():
     out = run_devices("""
         import jax, jax.numpy as jnp, numpy as np
