@@ -8,19 +8,21 @@ vectorized reference executor.
 
 Standalone usage (CI perf trajectory):
 
-  PYTHONPATH=src python benchmarks/gossip_traffic.py --smoke
+  PYTHONPATH=src python benchmarks/gossip_traffic.py --smoke --scenarios
 
 writes ``BENCH_netsim.json`` with slots / total-time / transmissions per
-protocol on the paper's 10-node testbed.
+protocol on the paper's 10-node testbed, and (with ``--scenarios``)
+``BENCH_scenarios.json`` — one registry scenario per executor through the
+declarative scenario API (:mod:`repro.scenario`).
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
 from repro.core.graph import TopologySpec, build_mst, color_graph, make_topology
-from repro.core.netsim import TestbedSpec, simulate_policy
 from repro.core.plan import make_policy, measure_policy
 from repro.core.schedule import (
     compile_dissemination,
@@ -28,8 +30,17 @@ from repro.core.schedule import (
     compile_segmented,
     compile_tree_allreduce,
 )
+from repro.scenario import ScenarioSpec, run_scenario, scenarios
 
 BENCH_PROTOCOLS = ("flooding", "mosgu", "segmented", "tree_allreduce")
+
+# one registry scenario per executor — the CI smoke matrix
+SCENARIO_SMOKE = (
+    ("paper_table3", "netsim"),
+    ("churn_storm", "engine"),
+    ("scale_1000", "plan"),
+    ("mesh_smoke", "jax"),
+)
 
 
 class _FakeMesh:
@@ -91,24 +102,27 @@ def netsim_bench(n: int = 10, model_mb: float = 21.2, seed: int = 3,
                  topology: str = "erdos_renyi", n_segments: int = 4) -> dict:
     """Per-protocol slots / total round time / transmissions on the testbed.
 
-    Each protocol's policy is built once and reused for both the slot count
-    and the fluid simulation, so every row describes one parameterization.
-    All values are deterministic given (topology, n, seed, model_mb).
+    Every row is one single-round :class:`ScenarioSpec` executed on the
+    netsim executor — the declarative front door; the underlay is derived
+    from the overlay's subnet/cost model. All values are deterministic given
+    (topology, n, seed, model_mb) and unchanged from the pre-scenario-API
+    driver (cross-checked in tests).
     """
-    overlay = make_topology(TopologySpec(kind=topology, n=n, seed=seed))
-    spec = TestbedSpec(n=n)
+    overlay = TopologySpec(kind=topology, n=n, seed=seed)
     out = {}
     for name in BENCH_PROTOCOLS:
-        policy = make_policy(name, overlay, n_segments=n_segments)
-        stats = measure_policy(policy)
-        r = simulate_policy(policy, spec, model_mb)
+        spec = ScenarioSpec(name=f"bench/{name}", overlay=overlay,
+                            protocol=name, payload=model_mb,
+                            n_segments=n_segments, rounds=1)
+        res = run_scenario(spec, executor="netsim")
+        row = res.rounds[0]
         out[name] = {
-            "slots": stats["n_slots"],
-            "transmissions": r.n_transfers,
-            "total_time_s": round(r.total_time_s, 4),
-            "mean_transfer_s": round(r.mean_transfer_s, 4),
-            "mean_bandwidth_mbps": round(r.mean_bandwidth_mbps, 4),
-            "max_concurrency": r.max_concurrency,
+            "slots": row.n_slots,
+            "transmissions": row.transmissions,
+            "total_time_s": round(row.total_time_s, 4),
+            "mean_transfer_s": round(row.mean_transfer_s, 4),
+            "mean_bandwidth_mbps": round(row.mean_bandwidth_mbps, 4),
+            "max_concurrency": row.max_concurrency,
         }
     return {
         "topology": topology,
@@ -120,8 +134,39 @@ def netsim_bench(n: int = 10, model_mb: float = 21.2, seed: int = 3,
     }
 
 
+def scenario_bench() -> list:
+    """One registry scenario per executor — the ScenarioResult trajectory."""
+    results = []
+    for name, executor in SCENARIO_SMOKE:
+        spec = scenarios.get(name)
+        t0 = time.time()
+        res = run_scenario(spec, executor=executor)
+        wall = time.time() - t0
+        bad = [r.round for r in res.rounds if r.numerics_ok is False]
+        if bad:
+            raise SystemExit(
+                f"scenario {name} [{executor}]: collective numerics mismatch "
+                f"in rounds {bad}")
+        d = res.to_dict()
+        d["wall_s"] = round(wall, 3)
+        results.append(d)
+        print(f"  scenario {name:22s} [{executor:6s}] rounds={len(res.rounds)} "
+              f"tx={res.total_transmissions:7d} bytes={res.total_bytes_mb:10.1f}MB "
+              f"({wall:.2f}s wall)")
+    return results
+
+
 def main(argv) -> int:
     smoke = "--smoke" in argv
+    with_scenarios = "--scenarios" in argv
+    if with_scenarios:
+        # the jax-executor scenario needs a multi-device (CPU) mesh; must be
+        # set before jax initializes, and must compose with any XLA_FLAGS
+        # the environment already exports
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=4").strip()
     bench = netsim_bench()
     with open("BENCH_netsim.json", "w") as f:
         json.dump(bench, f, indent=2)
@@ -130,6 +175,11 @@ def main(argv) -> int:
     for name, row in bench["protocols"].items():
         print(f"  {name:15s} slots={row['slots']:4d} tx={row['transmissions']:5d} "
               f"round={row['total_time_s']:8.2f}s bw={row['mean_bandwidth_mbps']:6.2f}MB/s")
+    if with_scenarios:
+        results = scenario_bench()
+        with open("BENCH_scenarios.json", "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote BENCH_scenarios.json ({len(results)} scenario runs)")
     if not smoke:
         csv_rows = []
         run(csv_rows)

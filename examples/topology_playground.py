@@ -72,6 +72,24 @@ def main():
     print("\nMST algorithm agreement on ER(24):", costs)
     print("BFS colors used:", sorted(set(color_graph(build_mst(g)).tolist())))
 
+    # the declarative front door: a scenario is declared once (overlay +
+    # derived underlay + protocol + payload + churn) and runs on any executor
+    from repro.scenario import run_scenario, scenarios
+
+    print(f"\nscenario registry: {scenarios.names()}")
+    cs = None
+    for name, executor in (("paper_table3", "netsim"), ("churn_storm", "engine")):
+        res = run_scenario(scenarios.get(name), executor=executor)
+        if name == "churn_storm":
+            cs = res
+        t = "" if res.total_time_s is None else f" sim-time={res.total_time_s:.1f}s"
+        print(f"  {name:18s} [{executor}] rounds={len(res.rounds)} "
+              f"tx={res.total_transmissions} "
+              f"bytes={res.total_bytes_mb:.0f}MB drops={res.total_drops}{t}")
+    print("  churn_storm membership per round:",
+          [len(r.members) for r in cs.rounds],
+          "| moderators:", [r.moderator for r in cs.rounds])
+
 
 if __name__ == "__main__":
     main()

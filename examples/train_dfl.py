@@ -7,6 +7,11 @@ This is the CPU-scale version of the production flow in
 ``repro.launch.train``; on TPU hardware the same code path runs the full
 assigned configs. Compares MOSGU tree-allreduce against naive flooding on
 identical data and verifies both give the identical global model.
+
+With ``--scenario NAME`` (e.g. ``mesh_smoke``) the run goes through
+:class:`repro.dfl.session.DFLSession` driven by a declarative registry
+scenario: its protocol picks the gossip mode and its churn schedule fires
+at the pinned rounds (replan + recompile on membership change).
 """
 import argparse
 import os
@@ -27,7 +32,19 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--gossip", default="tree_allreduce")
+    ap.add_argument("--scenario", default="",
+                    help="registry scenario driving protocol + churn")
     args = ap.parse_args()
+
+    scenario = None
+    if args.scenario:
+        from repro.scenario import resolve_gossip_mode, scenarios
+
+        scenario = scenarios.get(args.scenario)
+        args.gossip = resolve_gossip_mode(scenario.protocol)
+        args.steps = scenario.rounds
+        print(f"scenario {scenario.name!r}: protocol={scenario.protocol} "
+              f"rounds={args.steps} churn={[e.to_dict() for e in scenario.churn]}")
 
     from repro.configs import get_arch
     from repro.data import DataConfig, FederatedData
@@ -58,9 +75,20 @@ def main():
     state = trainer.init_state(jax.random.PRNGKey(0))
     tok, lab = data.global_batch()
     batch = Batch(tokens=jnp.asarray(tok), labels=jnp.asarray(lab))
+    t0 = time.time()
+    if scenario is not None:
+        from repro.dfl.session import DFLSession, run_scenario_rounds
+
+        def next_batch():
+            tok, lab = data.global_batch()
+            return Batch(tokens=jnp.asarray(tok), labels=jnp.asarray(lab))
+
+        session = DFLSession(trainer, scenario=scenario)
+        state, _ = run_scenario_rounds(session, state, batch, next_batch)
+        print(f"done in {time.time()-t0:.0f}s")
+        return
     step = trainer.jitted_train_step(jax.eval_shape(lambda: state),
                                      jax.eval_shape(lambda: batch))
-    t0 = time.time()
     for i in range(args.steps):
         state, metrics = step(state, batch)
         tok, lab = data.global_batch()

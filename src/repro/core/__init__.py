@@ -11,6 +11,7 @@ from .graph import (  # noqa: F401
     mst_prim,
     slot_length_for_colors,
     slot_length_s,
+    subnet_of,
 )
 from .gossip import GossipEngine, GossipNode, QueueEntry, fedavg_numpy  # noqa: F401
 from .moderator import ConnectivityReport, Moderator, SchedulePacket  # noqa: F401

@@ -394,13 +394,29 @@ class TopologySpec:
     intra_cost_ms: Tuple[float, float] = (0.4, 1.5)  # local-link ping range
     inter_cost_ms: Tuple[float, float] = (8.0, 40.0)  # router-hop ping range
 
+    def subnet(self, node: int) -> int:
+        """Which router subnet a node lives behind (the one true mapping —
+        the underlay (:class:`repro.core.netsim.TestbedSpec`) derives its
+        routing from this same function, so overlay edge costs and underlay
+        routing can never disagree)."""
+        return subnet_of(node, self.n, self.n_subnets)
 
-def _subnet_of(node: int, n: int, n_subnets: int) -> int:
+
+def subnet_of(node: int, n: int, n_subnets: int) -> int:
+    """Canonical node -> subnet assignment (contiguous equal-size blocks).
+
+    Shared by the overlay cost model (:func:`make_topology`) and the physical
+    underlay (:class:`repro.core.netsim.TestbedSpec`).
+    """
     return node * n_subnets // n
 
 
+# back-compat alias (pre-scenario-API name)
+_subnet_of = subnet_of
+
+
 def _edge_cost(u: int, v: int, spec: TopologySpec, rng: np.random.Generator) -> float:
-    same = _subnet_of(u, spec.n, spec.n_subnets) == _subnet_of(v, spec.n, spec.n_subnets)
+    same = spec.subnet(u) == spec.subnet(v)
     lo, hi = spec.intra_cost_ms if same else spec.inter_cost_ms
     return float(rng.uniform(lo, hi))
 

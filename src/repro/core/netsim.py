@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .graph import Graph, TopologySpec, _subnet_of, build_mst, color_graph, make_topology
+from .graph import Graph, TopologySpec, build_mst, color_graph, subnet_of
 from .plan import (
     BroadcastOncePolicy,
     CommPolicy,
@@ -41,7 +41,6 @@ from .plan import (
     ReplayPolicy,
     Send,
     SlotPlan,
-    make_policy,
 )
 
 LinkId = Tuple[str, int, int]  # ("access-up"/"access-down", node, -1) or ("trunk", r1, r2)
@@ -67,9 +66,43 @@ class TestbedSpec:
     # (bigger models) suffer more loss/retransmission, so the effective gamma
     # scales with sqrt(model_size / collapse_ref_mb) (paper Table III trend).
     collapse_ref_mb: float = 30.0
+    # Churn masking (scenario runner): when the healthy membership is a
+    # subset of the physical testbed, ``node_ids[i]`` is the physical node id
+    # of dense index i and ``phys_n`` the physical device count, so subnet
+    # routing follows the *physical* layout rather than the dense reindexing.
+    node_ids: Optional[Tuple[int, ...]] = None
+    phys_n: Optional[int] = None
+
+    @classmethod
+    def from_overlay(cls, overlay: TopologySpec, **overrides) -> "TestbedSpec":
+        """Derive the physical underlay from the overlay's subnet/cost model.
+
+        ``n`` and ``n_subnets`` are taken from the :class:`TopologySpec`, so
+        the routing (:meth:`subnet`, via the shared
+        :func:`repro.core.graph.subnet_of`) and the overlay's edge costs are
+        two views of one subnet layout. Latencies are scaled from the
+        overlay's ping ranges relative to the paper testbed's defaults
+        (intra-subnet midpoint 0.95 ms ~ 0.15 s FTP setup; inter-subnet
+        midpoint 24 ms ~ 0.35 s per router hop), so the default overlay spec
+        reproduces the paper's underlay exactly while a slower overlay yields
+        a proportionally slower underlay.
+        """
+        intra_mid = (overlay.intra_cost_ms[0] + overlay.intra_cost_ms[1]) / 2.0
+        inter_mid = (overlay.inter_cost_ms[0] + overlay.inter_cost_ms[1]) / 2.0
+        derived = dict(
+            n=overlay.n,
+            n_subnets=overlay.n_subnets,
+            base_latency_s=0.15 * (intra_mid / 0.95),
+            hop_latency_s=0.35 * (inter_mid / 24.0),
+        )
+        derived.update(overrides)
+        return cls(**derived)
 
     def subnet(self, node: int) -> int:
-        return _subnet_of(node, self.n, self.n_subnets)
+        if self.node_ids is not None:
+            return subnet_of(self.node_ids[node], self.phys_n or self.n,
+                             self.n_subnets)
+        return subnet_of(node, self.n, self.n_subnets)
 
     def links_for(self, src: int, dst: int) -> List[LinkId]:
         s, d = self.subnet(src), self.subnet(dst)
@@ -335,29 +368,19 @@ def compare_protocols(
 ) -> Dict[str, SimResult]:
     """Run protocols on one (topology, model size); the benchmark unit.
 
+    Deprecated front door: this now delegates to the declarative scenario
+    API (:func:`repro.scenario.compare_protocols`), which builds one
+    single-round :class:`repro.scenario.ScenarioSpec` per protocol and runs
+    it on the netsim executor. Outputs are unchanged.
+
     Default (``protocols=None``) reproduces the paper's two-column tables:
     ``full_dissemination=False`` measures one exchange step per round;
     ``True`` runs until every node holds all N models (Table I semantics).
-
-    Passing ``protocols`` (names from :func:`repro.core.plan.make_policy`,
-    e.g. ``("flooding", "mosgu", "segmented", "tree_allreduce")``) instead
-    runs each named policy to completion over the same overlay — the
-    full-dissemination protocol matrix.
+    Passing ``protocols`` (names from :func:`repro.core.plan.make_policy`)
+    instead runs each named policy to completion over the same overlay.
     """
-    spec = spec or TestbedSpec(n=n)
-    overlay = make_topology(TopologySpec(kind=topology, n=n, seed=seed))
-    if protocols is not None:
-        return {
-            name: simulate_policy(
-                make_policy(name, overlay, n_segments=n_segments), spec, model_mb)
-            for name in protocols
-        }
-    if full_dissemination:
-        return {
-            "broadcast": simulate_flooding(overlay, spec, model_mb),
-            "mosgu": simulate_mosgu(overlay, spec, model_mb),
-        }
-    return {
-        "broadcast": simulate_broadcast_exchange(spec, model_mb),
-        "mosgu": simulate_mosgu_exchange(overlay, spec, model_mb),
-    }
+    from ..scenario.runner import compare_protocols as _compare  # lazy: no cycle
+
+    return _compare(topology, model_mb, n=n, seed=seed, spec=spec,
+                    full_dissemination=full_dissemination,
+                    protocols=protocols, n_segments=n_segments)

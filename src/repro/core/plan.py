@@ -777,7 +777,8 @@ def measure_policy(policy: CommPolicy, max_slots: int = 1_000_000) -> Dict[str, 
 # ---------------------------------------------------------------------------
 
 PROTOCOL_NAMES = ("dissemination", "mosgu", "segmented", "segmented_gossip",
-                  "flooding", "tree_allreduce")
+                  "flooding", "tree_allreduce", "broadcast_exchange",
+                  "mosgu_exchange")
 
 
 def make_policy(
@@ -800,6 +801,8 @@ def make_policy(
 
     if name == "flooding":
         return FloodingPolicy(overlay)
+    if name in ("broadcast", "broadcast_exchange"):
+        return BroadcastOncePolicy(overlay.n)
     if mst is None:
         mst = build_mst(overlay, mst_algorithm)
     if colors is None:
@@ -811,4 +814,6 @@ def make_policy(
                                      first_color=first_color)
     if name == "tree_allreduce":
         return TreeAllreducePolicy(mst, colors, root)
+    if name == "mosgu_exchange":
+        return MstExchangePolicy(mst, colors)
     raise ValueError(f"unknown protocol {name!r}; known: {PROTOCOL_NAMES}")

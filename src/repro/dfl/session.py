@@ -21,6 +21,7 @@ retransmission-on-reconnect story).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
@@ -30,19 +31,26 @@ import numpy as np
 from ..core.graph import Graph, build_mst, color_graph
 from ..core.moderator import ConnectivityReport, Moderator
 from ..core.plan import SegmentedGossipPolicy, compile_policy
+from ..scenario.spec import ChurnEvent, ScenarioSpec, applicable_churn
 from ..core.schedule import compile_dissemination, compile_tree_allreduce, decompose_matchings, plan_to_perm_steps
 from .collectives import GossipPlan, make_node_graph
 from .trainer import DFLConfig, DFLTrainer
 
 
 def _plan_for_members(mesh, node_axes, members: Set[int],
-                      n_segments: int = 4) -> GossipPlan:
+                      n_segments: int = 4,
+                      full_graph: Optional[Graph] = None) -> GossipPlan:
     """GossipPlan over a *subset* of mesh nodes (churn masking).
 
     The MST/coloring runs on the healthy subgraph; perms are then relabelled
     back to physical node ids so ppermute still addresses real devices.
+    ``full_graph`` overrides the mesh-derived cost graph — the scenario
+    runner (:mod:`repro.scenario`) passes the declared overlay here so the
+    compiled collectives execute the *scenario's* schedule, not a separate
+    mesh-cost model.
     """
-    full = make_node_graph(mesh, tuple(a for a in node_axes if a in mesh.shape))
+    full = (full_graph if full_graph is not None else
+            make_node_graph(mesh, tuple(a for a in node_axes if a in mesh.shape)))
     members_sorted = sorted(members)
     index = {nid: i for i, nid in enumerate(members_sorted)}
     sub = Graph(full.adj[np.ix_(members_sorted, members_sorted)])
@@ -118,12 +126,21 @@ def _mesh_nodes(mesh, node_axes) -> int:
 
 @dataclass
 class DFLSession:
-    """Training session with moderator rotation and churn handling."""
+    """Training session with moderator rotation and churn handling.
+
+    ``scenario`` (a :class:`repro.scenario.spec.ScenarioSpec`) makes churn
+    declarative: the spec's ``leave``/``rejoin`` events fire automatically at
+    their pinned rounds inside :meth:`train_round`, so an experiment's churn
+    schedule is stated once and shared with the host-side executors
+    (:func:`repro.scenario.run_scenario`) instead of being hand-scripted
+    against :meth:`node_leaves` / :meth:`node_rejoins`.
+    """
 
     trainer: DFLTrainer
     moderator: Moderator = None  # type: ignore[assignment]
     round_idx: int = 0
     members: Set[int] = field(default_factory=set)
+    scenario: Optional[ScenarioSpec] = None
     _step_fn: Any = None
     _dirty: bool = True
 
@@ -155,6 +172,31 @@ class DFLSession:
         self.members.add(node_id)
         self._report_all()
 
+    def apply_scheduled_churn(self) -> List[ChurnEvent]:
+        """Fire the scenario's churn events pinned to the current round.
+
+        Events that cannot fire on this mesh (node id beyond the mesh's node
+        count, a leave that would drop below 2 healthy nodes, or a
+        redundant leave/rejoin) are skipped with a warning so a partially
+        applicable schedule is never silently misattributed.
+        """
+        if self.scenario is None:
+            return []
+        n = _mesh_nodes(self.trainer.mesh, self.trainer.cfg.node_axes)
+        applied, skipped = applicable_churn(
+            self.scenario.churn, self.round_idx, self.members, n_limit=n)
+        for ev in skipped:
+            warnings.warn(
+                f"scenario {self.scenario.name!r}: churn event {ev} "
+                f"skipped (mesh has {n} nodes, healthy={sorted(self.members)})",
+                stacklevel=2)
+        for ev in applied:
+            if ev.action == "leave":
+                self.node_leaves(ev.node)
+            else:
+                self.node_rejoins(ev.node)
+        return applied
+
     def rotate_moderator(self, votes: Optional[Dict[int, int]] = None) -> int:
         votes = votes or {u: (self.round_idx + 1) % max(len(self.members), 1)
                           for u in self.members}
@@ -166,15 +208,26 @@ class DFLSession:
     def _ensure_plan(self, state_shapes, batch_shapes) -> None:
         if not self._dirty and self._step_fn is not None:
             return
+        n_segments, full_graph = 4, None
+        if self.scenario is not None:
+            n_segments = self.scenario.n_segments
+            n = _mesh_nodes(self.trainer.mesh, self.trainer.cfg.node_axes)
+            if self.scenario.n == n:
+                # the declared overlay maps 1:1 onto the mesh nodes: compile
+                # the scenario's schedule, not the mesh-derived cost model
+                full_graph = self.scenario.overlay_graph()
         self.trainer.plan = _plan_for_members(
-            self.trainer.mesh, self.trainer.cfg.node_axes, self.members)
+            self.trainer.mesh, self.trainer.cfg.node_axes, self.members,
+            n_segments=n_segments, full_graph=full_graph)
         self._step_fn = self.trainer.jitted_train_step(state_shapes, batch_shapes)
         self._dirty = False
 
     # -- GU: one communication round --------------------------------------------
     def train_round(self, state, batch, local_steps: int = 1):
         """Run `local_steps` steps (each with gossip when interval==1), then
-        rotate the moderator — one full paper round."""
+        rotate the moderator — one full paper round. Scenario-scheduled churn
+        for this round fires first (replan + recompile happen below)."""
+        self.apply_scheduled_churn()
         state_shapes = jax.eval_shape(lambda: state)
         batch_shapes = jax.eval_shape(lambda: batch)
         self._ensure_plan(state_shapes, batch_shapes)
@@ -184,3 +237,21 @@ class DFLSession:
         self.round_idx += 1
         self.rotate_moderator()
         return state, metrics
+
+
+def run_scenario_rounds(session: DFLSession, state, batch,
+                        make_batch: Optional[Callable[[], Any]] = None,
+                        log: Callable[[str], None] = print):
+    """Drive a session for its scenario's round count — the shared loop
+    behind ``launch/train.py --scenario`` and ``examples/train_dfl.py
+    --scenario`` (churn fires inside :meth:`DFLSession.train_round`)."""
+    rounds = session.scenario.rounds if session.scenario is not None else 1
+    metrics = None
+    for i in range(rounds):
+        state, metrics = session.train_round(state, batch)
+        if make_batch is not None:
+            batch = make_batch()
+        log(f"round {i + 1:3d} loss={float(metrics['loss']):.4f} "
+            f"members={sorted(session.members)} "
+            f"moderator={session.moderator.moderator_id}")
+    return state, metrics

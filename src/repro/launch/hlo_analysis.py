@@ -161,10 +161,16 @@ def parse_hlo(hlo_text: str) -> HloModule:
 
 
 def _operand_names(rest: str) -> List[str]:
-    """Names in the operand list — the text up to the matching close paren."""
+    """Names in the operand list — the text up to the matching close paren.
+
+    Operand tokens look like ``f32[256,256]{1,0} %Arg_0.1``: the commas inside
+    shape brackets and layout braces are not separators, so the split tracks
+    nesting depth across all three bracket kinds.
+    """
     depth = 1
-    out = []
     cur = ""
+    toks: List[str] = []
+    inner = 0  # [] / {} nesting within the operand list
     for ch in rest:
         if ch == "(":
             depth += 1
@@ -172,11 +178,20 @@ def _operand_names(rest: str) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if depth >= 1:
-            cur += ch
-    for tok in cur.split(","):
-        tok = tok.strip()
-        m = re.search(r"%?([\w.\-]+)\s*$", tok)
+        if ch in "[{":
+            inner += 1
+        elif ch in "]}":
+            inner -= 1
+        elif ch == "," and depth == 1 and inner == 0:
+            toks.append(cur)
+            cur = ""
+            continue
+        cur += ch
+    if cur.strip():
+        toks.append(cur)
+    out = []
+    for tok in toks:
+        m = re.search(r"%?([\w.\-]+)\s*$", tok.strip())
         if m:
             out.append(m.group(1))
     return out

@@ -6,6 +6,15 @@ moderator rotation each communication round.
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
       --steps 50 --mesh 1x2x2 --gossip tree_allreduce
+
+With ``--scenario NAME`` the run is driven by a declarative registry
+scenario (:mod:`repro.scenario`): the scenario's protocol picks the gossip
+mode, its round count the number of communication rounds, and its churn
+schedule fires inside :class:`repro.dfl.session.DFLSession` (replan +
+recompile on every membership change, moderator rotation every round):
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --mesh 1x4x2 --scenario churn_storm
 """
 from __future__ import annotations
 
@@ -24,6 +33,9 @@ def main() -> None:
     ap.add_argument("--batch-per-node", type=int, default=2)
     ap.add_argument("--mesh", default="", help="e.g. 2x2 (data x model) or 1x2x2")
     ap.add_argument("--gossip", default="tree_allreduce")
+    ap.add_argument("--scenario", default="",
+                    help="registry scenario driving protocol/rounds/churn "
+                         "(see repro.scenario.scenarios.names())")
     ap.add_argument("--gossip-interval", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default="")
@@ -46,6 +58,16 @@ def main() -> None:
     from ..data import DataConfig, FederatedData
     from ..dfl import DFLConfig, DFLTrainer
     from ..models import Batch, build_model
+
+    scenario = None
+    if args.scenario:
+        from ..scenario import resolve_gossip_mode, scenarios
+
+        scenario = scenarios.get(args.scenario)
+        args.gossip = resolve_gossip_mode(scenario.protocol)
+        args.steps = scenario.rounds
+        print(f"scenario {scenario.name!r}: protocol={scenario.protocol} "
+              f"rounds={scenario.rounds} churn={len(scenario.churn)} events")
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -84,6 +106,15 @@ def main() -> None:
         return Batch(tokens=jnp.asarray(tok), labels=jnp.asarray(lab), **kw)
 
     batch = make_batch()
+    if scenario is not None:
+        from ..dfl.session import DFLSession, run_scenario_rounds
+
+        session = DFLSession(trainer, scenario=scenario)
+        t0 = time.time()
+        state, _ = run_scenario_rounds(session, state, batch, make_batch)
+        print(f"done: {scenario.rounds} scenario rounds in {time.time()-t0:.1f}s")
+        return
+
     step_fn = trainer.jitted_train_step(jax.eval_shape(lambda: state),
                                         jax.eval_shape(lambda: batch))
     t0 = time.time()

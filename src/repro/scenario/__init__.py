@@ -1,0 +1,28 @@
+"""Declarative scenario API: declare an experiment once, run it anywhere.
+
+    from repro.scenario import ScenarioSpec, run_scenario, scenarios
+
+    spec = scenarios.get("paper_table3")        # or build a ScenarioSpec
+    result = run_scenario(spec, executor="netsim")
+    print(result.to_json())
+
+See :mod:`repro.scenario.spec` for what a scenario declares,
+:mod:`repro.scenario.runner` for the executor matrix, and
+:mod:`repro.scenario.registry` for the named workloads.
+"""
+from . import registry as scenarios  # noqa: F401
+from .registry import register  # noqa: F401
+from .runner import (  # noqa: F401
+    EXECUTORS,
+    GOSSIP_MODES,
+    compare_protocols,
+    resolve_gossip_mode,
+    run_scenario,
+)
+from .spec import (  # noqa: F401
+    ChurnEvent,
+    RoundReport,
+    ScenarioResult,
+    ScenarioSpec,
+    resolve_payload_mb,
+)

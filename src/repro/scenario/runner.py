@@ -1,0 +1,353 @@
+"""Scenario execution: one declared spec, any executor, one report shape.
+
+``run_scenario(spec, executor=...)`` drives the full moderator lifecycle of
+the paper (connectivity reports -> MST + coloring -> gossip -> rotation,
+Section III-A) around the chosen executor:
+
+=========  ================================================================
+executor   what runs each round
+=========  ================================================================
+plan       :func:`repro.core.plan.measure_policy` — the vectorized counting
+           path (slots / transmissions / bytes; the N=1000 sweep scale)
+engine     :class:`repro.core.gossip.GossipEngine` — runtime FIFO queues
+           with seeded transient link failures and retransmission
+netsim     :func:`repro.core.netsim.simulate_policy` — the contended fluid
+           underlay derived from the overlay's subnet/cost structure
+jax        :func:`repro.dfl.collectives.gossip_exchange` — the compiled
+           ``ppermute`` lowering on a real device mesh, churn-masked via
+           :func:`repro.dfl.session._plan_for_members`
+=========  ================================================================
+
+All executors interpret the *same* communication-plan policy built over the
+*same* moderator-maintained member subgraph, so transmission/byte accounting
+agrees across them (tested in ``tests/test_scenario.py``). Churn events
+(``spec.churn``) are applied before their round; the moderator recomputes
+the schedule only on churn and rotates by vote after every round, including
+the emergency fallback when the current moderator itself leaves.
+
+Link failures (``spec.drop_rate``) are a runtime-queue behaviour: the engine
+executor retransmits (paper III-D) and counts drops; the static executors
+run failure-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.gossip import GossipEngine
+from ..core.graph import Graph, TopologySpec
+from ..core.moderator import ConnectivityReport, Moderator
+from ..core.netsim import SimResult, TestbedSpec, simulate_policy
+from ..core.plan import CommPolicy, make_policy, measure_policy
+from .spec import (
+    ChurnEvent,
+    RoundReport,
+    ScenarioResult,
+    ScenarioSpec,
+    applicable_churn,
+)
+
+EXECUTORS = ("plan", "engine", "netsim", "jax")
+
+# scenario protocol name -> repro.dfl.collectives gossip mode
+GOSSIP_MODES = {
+    "dissemination": "dissemination",
+    "mosgu": "dissemination",
+    "segmented": "segmented",
+    "segmented_gossip": "segmented",
+    "tree_allreduce": "tree_allreduce",
+    "flooding": "flooding",
+}
+
+
+def resolve_gossip_mode(protocol: str) -> str:
+    """The JAX collective mode for a scenario protocol (shared by the jax
+    executor and every scenario-driven training entry point)."""
+    try:
+        return GOSSIP_MODES[protocol]
+    except KeyError:
+        raise ValueError(
+            f"scenario protocol {protocol!r} has no JAX gossip mode; "
+            f"known: {sorted(GOSSIP_MODES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Moderator lifecycle helpers
+# ---------------------------------------------------------------------------
+
+
+def _file_initial_reports(mod: Moderator, overlay: Graph) -> None:
+    for u in range(overlay.n):
+        costs = {v: float(overlay.adj[u, v]) for v in overlay.neighbors(u)}
+        mod.receive_report(ConnectivityReport(u, f"node{u}", costs))
+
+
+def _apply_churn(mod: Moderator, overlay: Graph,
+                 churn: Sequence[ChurnEvent], round_idx: int) -> List[ChurnEvent]:
+    """Apply this round's membership changes to the moderator's table.
+
+    Feasibility is decided by the shared :func:`applicable_churn` (the same
+    rule set `DFLSession` uses), then applied to the report table here.
+    """
+    applied, _ = applicable_churn(churn, round_idx, mod.members,
+                                  n_limit=overlay.n)
+    for ev in applied:
+        if ev.action == "leave":
+            mod.remove_node(ev.node)
+        else:
+            costs = {v: float(overlay.adj[ev.node, v])
+                     for v in mod.members if overlay.adj[ev.node, v] > 0}
+            mod.receive_report(ConnectivityReport(ev.node, f"node{ev.node}", costs))
+            for v, c in costs.items():  # symmetric report, as a live ping would
+                mod.reports[v].costs_ms[ev.node] = c
+    return applied
+
+
+def _rotate(mod: Moderator) -> Moderator:
+    """Round-robin vote, tallied by the current moderator (paper III-A)."""
+    members = mod.members
+    cur = mod.moderator_id if mod.moderator_id in members else members[0]
+    candidate = members[(members.index(cur) + 1) % len(members)]
+    return mod.handover(mod.elect_next({u: candidate for u in members}))
+
+
+def _drop_fn(spec: ScenarioSpec, round_idx: int):
+    if spec.drop_rate <= 0:
+        return None
+    rng = np.random.default_rng([spec.drop_seed, round_idx])
+
+    def drop(slot_idx: int, src: int, dst: int) -> bool:
+        return bool(rng.random() < spec.drop_rate)
+
+    return drop
+
+
+def _membership_rounds(spec: ScenarioSpec, overlay: Graph):
+    """The shared per-round moderator driver, identical on every executor.
+
+    Yields ``(round_idx, moderator, members, applied_churn)`` after applying
+    the round's churn events, running the emergency re-election when the
+    current moderator itself left, and enforcing the 2-node floor; rotates
+    the moderator by round-robin vote after control returns.
+    """
+    mod = Moderator(0, spec.mst_algorithm, spec.coloring_algorithm,
+                    protocol=spec.protocol, n_segments=spec.n_segments)
+    _file_initial_reports(mod, overlay)
+    for r in range(spec.rounds):
+        applied = _apply_churn(mod, overlay, spec.churn, r)
+        if mod.moderator_id not in mod.reports:
+            # the moderator itself left: emergency round-robin election
+            mod = mod.handover(mod.elect_next({}))
+        members = mod.members
+        if len(members) < 2:
+            raise ValueError(f"scenario {spec.name!r} dropped below 2 nodes")
+        yield r, mod, members, applied
+        mod = _rotate(mod)
+
+
+# ---------------------------------------------------------------------------
+# Host-side executors (plan / engine / netsim)
+# ---------------------------------------------------------------------------
+
+
+def _member_testbed(spec: ScenarioSpec, members: Sequence[int]) -> TestbedSpec:
+    """The underlay restricted to the healthy members (dense reindexing).
+
+    ``phys_n`` follows the *underlay's* declared device count (it may
+    legitimately exceed the overlay), so an explicit TestbedSpec keeps its
+    physical subnet layout under the dense reindexing.
+    """
+    base = spec.testbed()
+    return dataclasses.replace(
+        base, n=len(members), node_ids=tuple(members), phys_n=base.n)
+
+
+def _run_host(spec: ScenarioSpec, executor: str,
+              record_trace: bool) -> ScenarioResult:
+    overlay = spec.overlay_graph()
+    payload_mb = spec.payload_mb()
+
+    reports: List[RoundReport] = []
+    sims: List[SimResult] = []
+    policy: Optional[CommPolicy] = None
+    policy_members: Optional[Tuple[int, ...]] = None
+    policy_stats: Optional[Dict[str, int]] = None
+
+    for r, mod, members, applied in _membership_rounds(spec, overlay):
+        if policy is None or tuple(members) != policy_members:
+            g_sub, _ = mod.build_graph()
+            policy = make_policy(
+                spec.protocol, g_sub,
+                mst_algorithm=spec.mst_algorithm,
+                coloring_algorithm=spec.coloring_algorithm,
+                n_segments=spec.n_segments)
+            policy_members = tuple(members)
+            # slot/tx counts are a pure function of the policy: sweep once
+            # per membership epoch, not once per round
+            policy_stats = None if executor == "engine" else measure_policy(policy)
+
+        common = dict(round=r, protocol=spec.protocol, members=list(members),
+                      moderator=mod.moderator_id,
+                      churn_applied=[ev.to_dict() for ev in applied])
+        if executor == "plan":
+            tx = policy_stats["transmissions"]
+            reports.append(RoundReport(
+                n_slots=policy_stats["n_slots"], transmissions=tx,
+                bytes_mb=tx * payload_mb * policy.payload_fraction, **common))
+        elif executor == "engine":
+            eng = GossipEngine(policy=policy, drop_fn=_drop_fn(spec, r))
+            n_slots = eng.run_round(r)
+            sent = sum(len(rep.sends) for rep in eng.reports)
+            drops = sum(len(rep.dropped) for rep in eng.reports)
+            attempted = sent + drops  # a dropped transfer still burned wire time
+            reports.append(RoundReport(
+                n_slots=n_slots, transmissions=attempted,
+                bytes_mb=attempted * payload_mb * policy.payload_fraction,
+                drops=drops, **common))
+        else:  # netsim
+            sim = simulate_policy(policy, _member_testbed(spec, members),
+                                  payload_mb, record_trace=record_trace)
+            sims.append(sim)
+            reports.append(RoundReport(
+                n_slots=policy_stats["n_slots"], transmissions=sim.n_transfers,
+                bytes_mb=sim.n_transfers * payload_mb * policy.payload_fraction,
+                total_time_s=sim.total_time_s,
+                mean_transfer_s=sim.mean_transfer_s,
+                mean_bandwidth_mbps=sim.mean_bandwidth_mbps,
+                max_concurrency=sim.max_concurrency, **common))
+
+    return ScenarioResult(
+        scenario=spec.name, executor=executor, protocol=spec.protocol,
+        payload_mb=payload_mb, rounds=reports, spec=spec.to_dict(),
+        sim_results=sims)
+
+
+# ---------------------------------------------------------------------------
+# JAX collectives executor
+# ---------------------------------------------------------------------------
+
+
+def _run_jax(spec: ScenarioSpec) -> ScenarioResult:
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from ..dfl.collectives import gossip_collective_bytes, gossip_exchange
+    from ..dfl.session import _plan_for_members
+
+    mode = resolve_gossip_mode(spec.protocol)
+    if mode == "flooding" and spec.churn:
+        raise ValueError("the flooding collective (all_gather) cannot mask "
+                         "churned nodes; use an MST mode for churn scenarios")
+    n = spec.n
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"jax executor needs >= {n} devices for a {n}-node scenario; on "
+            f"CPU set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax")
+    mesh = Mesh(np.asarray(jax.devices()[:n]).reshape(n), ("data",))
+    overlay = spec.overlay_graph()
+    payload_mb = spec.payload_mb()
+
+    # proxy parameters: accounting uses the declared payload size, numerics
+    # are verified on a small sharded tree (exact FedAvg mean everywhere)
+    w = np.arange(n * 4, dtype=np.float32).reshape(n, 4)
+    specs_tree = {"w": P("data")}
+    reports: List[RoundReport] = []
+    plan = None
+    plan_members: Optional[Tuple[int, ...]] = None
+    exchange = None
+
+    for r, mod, members, applied in _membership_rounds(spec, overlay):
+        if plan is None or tuple(members) != plan_members:
+            plan = _plan_for_members(mesh, ("data",), set(members),
+                                     n_segments=spec.n_segments,
+                                     full_graph=overlay)
+            plan_members = tuple(members)
+            # one compile per membership epoch, reused across rounds
+            bound_plan = plan
+            exchange = jax.jit(lambda t: gossip_exchange(
+                mode, bound_plan, mesh, t, specs_tree))
+
+        theta = {"w": jax.device_put(
+            np.asarray(w), NamedSharding(mesh, P("data")))}
+        out = exchange(theta)
+        res = np.asarray(out["w"])
+        healthy_mean = w[list(members)].mean(axis=0)
+        masked = sorted(set(range(n)) - set(members))
+        numerics_ok = bool(np.allclose(res[list(members)], healthy_mean,
+                                       atol=1e-5))
+        if masked and mode != "flooding":
+            numerics_ok &= bool(np.allclose(res[masked], w[masked], atol=1e-6))
+
+        slot_plan = {"dissemination": plan.dissemination,
+                     "segmented": plan.segmented,
+                     "tree_allreduce": plan.tree}.get(mode)
+        if slot_plan is not None:
+            tx = slot_plan.total_transmissions()
+            n_slots = slot_plan.n_slots
+        else:  # flooding = all_gather: every node receives N-1 replicas
+            tx = len(members) * (len(members) - 1)
+            n_slots = 1
+        bytes_mb = gossip_collective_bytes(mode, plan, payload_mb * 1e6) / 1e6
+        reports.append(RoundReport(
+            round=r, protocol=spec.protocol, members=list(members),
+            moderator=mod.moderator_id, n_slots=n_slots, transmissions=tx,
+            bytes_mb=bytes_mb, numerics_ok=numerics_ok,
+            churn_applied=[ev.to_dict() for ev in applied]))
+
+    return ScenarioResult(
+        scenario=spec.name, executor="jax", protocol=spec.protocol,
+        payload_mb=payload_mb, rounds=reports, spec=spec.to_dict())
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def run_scenario(spec: ScenarioSpec, executor: str = "engine",
+                 record_trace: bool = False) -> ScenarioResult:
+    """Execute a declared scenario end-to-end on one executor."""
+    spec.validate()
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r}; known: {EXECUTORS}")
+    if executor == "jax":
+        return _run_jax(spec)
+    return _run_host(spec, executor, record_trace)
+
+
+def compare_protocols(
+    topology: str,
+    model_mb: float,
+    n: int = 10,
+    seed: int = 0,
+    spec: Optional[TestbedSpec] = None,
+    full_dissemination: bool = False,
+    protocols: Optional[Sequence[str]] = None,
+    n_segments: int = 4,
+) -> Dict[str, SimResult]:
+    """Run protocols on one (topology, model size) through the scenario API.
+
+    Same contract as the historical ``repro.core.netsim.compare_protocols``
+    (which now delegates here): the default reproduces the paper's two-column
+    tables; ``protocols`` runs any registry subset to completion over the
+    same overlay. Each row is one single-round :class:`ScenarioSpec` executed
+    on the netsim executor.
+    """
+    if protocols is not None:
+        names = {p: p for p in protocols}
+    elif full_dissemination:
+        names = {"broadcast": "flooding", "mosgu": "dissemination"}
+    else:
+        names = {"broadcast": "broadcast_exchange", "mosgu": "mosgu_exchange"}
+    overlay = TopologySpec(kind=topology, n=n, seed=seed)
+    out: Dict[str, SimResult] = {}
+    for key, proto in names.items():
+        s = ScenarioSpec(
+            name=f"compare/{topology}/{proto}", overlay=overlay,
+            underlay=spec, protocol=proto, payload=model_mb,
+            n_segments=n_segments, rounds=1)
+        out[key] = run_scenario(s, executor="netsim").sim_results[0]
+    return out

@@ -1,0 +1,308 @@
+"""Declarative scenario specification — one front door for experiments.
+
+The paper's headline claim is that *scenarios* — topology family x message
+capacity x physical subnet layout — decide which gossip schedule wins
+(Tables III-V). Before this layer, composing such an experiment was bespoke
+in every entry point (``compare_protocols``, ``DFLSession``,
+``launch/train.py``, the benchmarks, the examples), with overlay edge costs
+and underlay latencies drawn from unrelated models.
+
+A :class:`ScenarioSpec` declares the whole experiment once:
+
+* **overlay** — a :class:`repro.core.graph.TopologySpec` (generated topology
+  with subnet-aware costs) or an explicit cost matrix;
+* **underlay** — a :class:`repro.core.netsim.TestbedSpec`; when omitted it is
+  *derived from* the overlay's subnet/cost structure
+  (:meth:`TestbedSpec.from_overlay`), so the two can never disagree;
+* **protocol** — a name from :func:`repro.core.plan.make_policy` plus
+  ``n_segments`` for segmented gossip;
+* **payload** — model size in MB, a paper payload code/name (Table II,
+  :mod:`repro.configs.paper_payloads`), or a :mod:`repro.configs` arch name
+  resolved to on-wire bytes (bf16);
+* **rounds** and a **churn schedule** — ``leave``/``rejoin`` events pinned to
+  rounds (the moderator recomputes MST/coloring on churn, paper III-A);
+* **link failures** — a drop rate + seed (the queue engine retransmits,
+  paper III-D).
+
+:func:`repro.scenario.runner.run_scenario` executes a spec on any executor
+and always returns the same structured per-round :class:`RoundReport` and an
+aggregate, JSON-serializable :class:`ScenarioResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.graph import Graph, TopologySpec, make_topology
+from ..core.netsim import SimResult, TestbedSpec
+
+# Protocol names a scenario may declare (everything make_policy knows).
+SCENARIO_PROTOCOLS = (
+    "dissemination", "mosgu", "segmented", "segmented_gossip", "flooding",
+    "tree_allreduce", "broadcast_exchange", "mosgu_exchange",
+)
+
+CHURN_ACTIONS = ("leave", "rejoin")
+
+
+def resolve_payload_mb(payload: Union[float, int, str]) -> float:
+    """Resolve a scenario payload declaration to on-wire megabytes.
+
+    Accepts a raw size in MB, a paper payload code or name (Table II, e.g.
+    ``"b0"`` / ``"EfficientNet-B0"``), or a :mod:`repro.configs` architecture
+    name (e.g. ``"smollm-360m"``) resolved to ``param_count x 2`` bytes
+    (bf16 on the wire).
+    """
+    if isinstance(payload, (int, float)) and not isinstance(payload, bool):
+        mb = float(payload)
+        if mb <= 0:
+            raise ValueError(f"payload size must be positive, got {mb}")
+        return mb
+    name = str(payload)
+    from ..configs.paper_payloads import PAPER_PAYLOADS  # light, no jax
+
+    if name in PAPER_PAYLOADS:
+        return PAPER_PAYLOADS[name].capacity_mb
+    for p in PAPER_PAYLOADS.values():
+        if p.name == name:
+            return p.capacity_mb
+    from ..configs import get_arch, list_archs  # lazy: pulls jax
+
+    if name in list_archs():
+        return get_arch(name).param_count() * 2 / 1e6
+    raise ValueError(
+        f"unknown payload {payload!r}: expected MB, a paper payload code "
+        f"({sorted(PAPER_PAYLOADS)}), or an arch name ({list_archs()})")
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """A membership change pinned to a round (applied before the round runs)."""
+
+    round: int
+    action: str  # "leave" | "rejoin"
+    node: int
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"round": self.round, "action": self.action, "node": self.node}
+
+
+def applicable_churn(
+    churn: Sequence[ChurnEvent],
+    round_idx: int,
+    members: Sequence[int],
+    n_limit: Optional[int] = None,
+) -> Tuple[List[ChurnEvent], List[ChurnEvent]]:
+    """Partition a round's churn events into (applicable, skipped).
+
+    The single source of truth for churn feasibility, shared by every
+    consumer (the scenario runner and :class:`repro.dfl.session.DFLSession`):
+    events are evaluated sequentially against the evolving membership, a
+    ``leave`` must keep at least 2 healthy nodes, a ``rejoin`` must name an
+    absent node, and ``n_limit`` (e.g. a smaller device mesh) bounds the
+    addressable node ids.
+    """
+    current = set(members)
+    applicable: List[ChurnEvent] = []
+    skipped: List[ChurnEvent] = []
+    for ev in churn:
+        if ev.round != round_idx:
+            continue
+        ok = n_limit is None or 0 <= ev.node < n_limit
+        if ok and ev.action == "leave":
+            ok = ev.node in current and len(current) > 2
+            if ok:
+                current.discard(ev.node)
+        elif ok and ev.action == "rejoin":
+            ok = ev.node not in current
+            if ok:
+                current.add(ev.node)
+        (applicable if ok else skipped).append(ev)
+    return applicable, skipped
+
+
+@dataclass
+class ScenarioSpec:
+    """One declared experiment, runnable on any executor."""
+
+    name: str = "custom"
+    overlay: Union[TopologySpec, np.ndarray, Sequence[Sequence[float]]] = field(
+        default_factory=lambda: TopologySpec(kind="erdos_renyi"))
+    protocol: str = "dissemination"
+    n_segments: int = 4
+    payload: Union[float, str] = 21.2  # MB | paper payload code | arch name
+    rounds: int = 1
+    churn: Tuple[ChurnEvent, ...] = ()
+    underlay: Optional[TestbedSpec] = None  # None = derived from the overlay
+    drop_rate: float = 0.0  # transient link-failure probability per transfer
+    drop_seed: int = 0
+    mst_algorithm: str = "prim"
+    coloring_algorithm: str = "bfs"
+    # Recommended executors (all of runner.EXECUTORS still accept the spec;
+    # this guides smoke sweeps, e.g. netsim is impractical at N=1000).
+    executors: Tuple[str, ...] = ("plan", "engine", "netsim")
+    description: str = ""
+
+    # -- derived views -------------------------------------------------------
+    @property
+    def n(self) -> int:
+        if isinstance(self.overlay, TopologySpec):
+            return self.overlay.n
+        return int(np.asarray(self.overlay).shape[0])
+
+    def overlay_graph(self) -> Graph:
+        """The declared overlay as a concrete cost graph (deterministic)."""
+        if isinstance(self.overlay, TopologySpec):
+            return make_topology(self.overlay)
+        return Graph(np.asarray(self.overlay, dtype=np.float64))
+
+    def testbed(self) -> TestbedSpec:
+        """The physical underlay: explicit, or derived from the overlay so
+        subnet layout and cost model are a single source of truth."""
+        if self.underlay is not None:
+            return self.underlay
+        if isinstance(self.overlay, TopologySpec):
+            return TestbedSpec.from_overlay(self.overlay)
+        return TestbedSpec(n=self.n)
+
+    def payload_mb(self) -> float:
+        return resolve_payload_mb(self.payload)
+
+    def replace(self, **changes) -> "ScenarioSpec":
+        return dataclasses.replace(self, **changes)
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> "ScenarioSpec":
+        if self.protocol not in SCENARIO_PROTOCOLS:
+            raise ValueError(
+                f"unknown protocol {self.protocol!r}; known: {SCENARIO_PROTOCOLS}")
+        if self.rounds < 1:
+            raise ValueError("a scenario needs at least one round")
+        if self.n_segments < 1:
+            raise ValueError("n_segments must be >= 1")
+        if not (0.0 <= self.drop_rate < 1.0):
+            raise ValueError("drop_rate must be in [0, 1)")
+        n = self.n
+        for ev in self.churn:
+            if ev.action not in CHURN_ACTIONS:
+                raise ValueError(f"unknown churn action {ev.action!r}")
+            if not (0 <= ev.round < self.rounds):
+                raise ValueError(
+                    f"churn event {ev} outside round range [0, {self.rounds})")
+            if not (0 <= ev.node < n):
+                raise ValueError(f"churn event {ev} names node outside [0, {n})")
+        return self
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        if isinstance(self.overlay, TopologySpec):
+            overlay: Any = {"type": "TopologySpec", **dataclasses.asdict(self.overlay)}
+        else:
+            overlay = {"type": "cost_matrix",
+                       "adj": np.asarray(self.overlay).tolist()}
+        return {
+            "name": self.name,
+            "overlay": overlay,
+            "underlay": (None if self.underlay is None
+                         else dataclasses.asdict(self.underlay)),
+            "protocol": self.protocol,
+            "n_segments": self.n_segments,
+            "payload": self.payload,
+            "payload_mb": self.payload_mb(),
+            "rounds": self.rounds,
+            "churn": [ev.to_dict() for ev in self.churn],
+            "drop_rate": self.drop_rate,
+            "drop_seed": self.drop_seed,
+            "mst_algorithm": self.mst_algorithm,
+            "coloring_algorithm": self.coloring_algorithm,
+            "description": self.description,
+        }
+
+
+@dataclass
+class RoundReport:
+    """What one communication round did, uniform across executors."""
+
+    round: int
+    protocol: str
+    members: List[int]  # healthy physical node ids during the round
+    moderator: int
+    n_slots: int
+    transmissions: int  # attempted transfers (retransmissions included)
+    bytes_mb: float  # bytes on the wire, MB (payload_fraction applied)
+    drops: int = 0
+    churn_applied: List[Dict[str, Any]] = field(default_factory=list)
+    # netsim-only timing (None on counting/queue/jax executors)
+    total_time_s: Optional[float] = None
+    mean_transfer_s: Optional[float] = None
+    mean_bandwidth_mbps: Optional[float] = None
+    max_concurrency: Optional[int] = None
+    # jax-only: did the collective produce the exact FedAvg mean?
+    numerics_ok: Optional[bool] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return {k: v for k, v in d.items() if v is not None}
+
+
+@dataclass
+class ScenarioResult:
+    """Aggregate, JSON-serializable outcome of one scenario run."""
+
+    scenario: str
+    executor: str
+    protocol: str
+    payload_mb: float
+    rounds: List[RoundReport]
+    spec: Dict[str, Any] = field(default_factory=dict)
+    # raw fluid-sim results (netsim executor only; not serialized)
+    sim_results: List[SimResult] = field(default_factory=list, repr=False)
+
+    # -- aggregates ----------------------------------------------------------
+    @property
+    def total_transmissions(self) -> int:
+        return sum(r.transmissions for r in self.rounds)
+
+    @property
+    def total_bytes_mb(self) -> float:
+        return sum(r.bytes_mb for r in self.rounds)
+
+    @property
+    def total_slots(self) -> int:
+        return sum(r.n_slots for r in self.rounds)
+
+    @property
+    def total_drops(self) -> int:
+        return sum(r.drops for r in self.rounds)
+
+    @property
+    def total_time_s(self) -> Optional[float]:
+        times = [r.total_time_s for r in self.rounds if r.total_time_s is not None]
+        return sum(times) if times else None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario,
+            "executor": self.executor,
+            "protocol": self.protocol,
+            "payload_mb": self.payload_mb,
+            "totals": {
+                "rounds": len(self.rounds),
+                "transmissions": self.total_transmissions,
+                "bytes_mb": round(self.total_bytes_mb, 6),
+                "slots": self.total_slots,
+                "drops": self.total_drops,
+                "time_s": (None if self.total_time_s is None
+                           else round(self.total_time_s, 6)),
+            },
+            "rounds_detail": [r.to_dict() for r in self.rounds],
+            "spec": self.spec,
+        }
+
+    def to_json(self, **kwargs) -> str:
+        kwargs.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kwargs)

@@ -62,6 +62,69 @@ class TestModerator:
         assert nxt.compute_schedule(10.0).version == mod.version  # no churn
 
 
+class TestRotationEdgeCases:
+    """Vote ties, departed voters/candidates, and a departing moderator."""
+
+    def test_tie_breaks_to_lowest_candidate_id(self):
+        mod = Moderator(0)
+        _fill(mod)
+        # 2 votes each for candidates 4 and 1 -> lowest id wins
+        assert mod.elect_next({0: 4, 1: 4, 2: 1, 3: 1}) == 1
+        # three-way tie
+        assert mod.elect_next({0: 5, 1: 3, 2: 4}) == 3
+
+    def test_votes_from_departed_nodes_ignored(self):
+        mod = Moderator(0)
+        _fill(mod)
+        mod.remove_node(5)
+        # 5's vote must not count: without it, candidate 2 wins 2-1
+        assert mod.elect_next({0: 2, 1: 2, 2: 3, 5: 3}) == 2
+        # a *unanimous* departed-voter ballot is an empty tally -> round-robin
+        assert mod.elect_next({5: 4, 99: 4}) == 1  # next after moderator 0
+
+    def test_votes_for_departed_candidate_ignored(self):
+        mod = Moderator(0)
+        _fill(mod)
+        mod.remove_node(4)
+        assert mod.elect_next({0: 4, 1: 4, 2: 3}) == 3
+
+    def test_rotation_when_current_moderator_left(self):
+        """The moderator itself departs: the fallback election must still
+        produce a live member, and handover must work from the stale id."""
+        mod = Moderator(2)
+        _fill(mod)
+        mod.remove_node(2)
+        assert 2 not in mod.members
+        nxt = mod.elect_next({})  # no votes -> round-robin from a gone id
+        assert nxt in mod.members
+        new_mod = mod.handover(nxt)
+        assert new_mod.moderator_id == nxt
+        pkt = new_mod.compute_schedule(10.0)
+        assert 2 not in pkt.neighbor_table
+        assert len(pkt.neighbor_table) == 5
+
+    def test_rotation_after_moderator_left_with_votes(self):
+        mod = Moderator(1)
+        _fill(mod)
+        mod.remove_node(1)
+        # live members still out-vote the stale state
+        assert mod.elect_next({0: 3, 2: 3, 4: 5}) == 3
+
+    def test_scenario_runner_survives_moderator_departure(self):
+        """End-to-end: a churn event that removes the current moderator."""
+        from repro.scenario import ChurnEvent, ScenarioSpec, run_scenario
+
+        spec = ScenarioSpec(
+            name="mod-leaves",
+            overlay=TopologySpec(kind="complete", n=6, seed=0),
+            protocol="dissemination", payload=5.0, rounds=3,
+            churn=(ChurnEvent(1, "leave", 1),))  # node 1 moderates round 1
+        res = run_scenario(spec, executor="engine")
+        assert [len(r.members) for r in res.rounds] == [6, 5, 5]
+        assert res.rounds[1].moderator in res.rounds[1].members
+        assert all(1 not in r.members for r in res.rounds[1:])
+
+
 class TestProtocol:
     def test_round_with_payloads(self):
         g = make_topology(TopologySpec(kind="complete", n=6, seed=0))

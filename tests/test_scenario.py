@@ -1,0 +1,327 @@
+"""Declarative scenario API: one spec, every executor, one report shape.
+
+Pins the PR-2 tentpole properties:
+  * every registry scenario runs end-to-end through ``run_scenario`` on at
+    least two executors,
+  * cross-executor consistency: the same spec produces identical
+    transmission/byte accounting on the queue engine and the fluid netsim,
+  * the historical front doors (``compare_protocols``, the smoke benchmark)
+    produce their previous outputs through the new API,
+  * churn schedules, link failures, payload resolution, and JSON
+    serialization behave as declared.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, TopologySpec, make_topology, subnet_of
+from repro.core.netsim import TestbedSpec
+from repro.core.netsim import compare_protocols as netsim_compare
+from repro.scenario import (
+    ChurnEvent,
+    ScenarioSpec,
+    compare_protocols,
+    resolve_payload_mb,
+    run_scenario,
+    scenarios,
+)
+
+REGISTRY_EXPECTED = {
+    "paper_table3", "paper_flooding_baseline", "churn_storm", "lossy_links",
+    "segmented_sweep", "scale_1000", "mesh_smoke",
+}
+
+
+class TestRegistry:
+    def test_names_and_get(self):
+        assert REGISTRY_EXPECTED <= set(scenarios.names())
+        spec = scenarios.get("paper_table3")
+        assert spec.protocol == "mosgu"
+        assert spec.payload_mb() == pytest.approx(21.2)
+
+    def test_get_returns_fresh_specs(self):
+        a, b = scenarios.get("churn_storm"), scenarios.get("churn_storm")
+        assert a is not b
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(ValueError, match="unknown scenario"):
+            scenarios.get("does-not-exist")
+
+    @pytest.mark.parametrize("name", sorted(REGISTRY_EXPECTED - {"mesh_smoke"}))
+    def test_every_registry_scenario_runs_on_two_executors(self, name):
+        """The acceptance matrix. (mesh_smoke's second executor is jax — it
+        needs a multi-device mesh and is covered in TestJaxExecutor.)"""
+        spec = scenarios.get(name)
+        executors = [e for e in spec.executors if e != "jax"][:2]
+        assert len(executors) >= 2, name
+        results = [run_scenario(spec, executor=e) for e in executors]
+        for res in results:
+            assert len(res.rounds) == spec.rounds
+            assert res.total_transmissions > 0
+            assert res.total_bytes_mb > 0
+        # accounting agrees wherever the run is failure-free
+        if spec.drop_rate == 0:
+            a, b = results
+            assert a.total_transmissions == b.total_transmissions, name
+            assert a.total_bytes_mb == pytest.approx(b.total_bytes_mb), name
+
+    def test_mesh_smoke_runs_on_plan_executor(self):
+        res = run_scenario(scenarios.get("mesh_smoke"), executor="plan")
+        # round 0: full 4-node tree (2·(N-1)=6); round 1: node 3 left (4)
+        assert [r.transmissions for r in res.rounds] == [6, 4]
+
+
+class TestCrossExecutorConsistency:
+    @pytest.mark.parametrize("name", ["paper_table3", "churn_storm",
+                                      "segmented_sweep"])
+    def test_engine_matches_netsim_accounting(self, name):
+        """Same spec -> identical per-round transmission/byte accounting."""
+        spec = scenarios.get(name)
+        eng = run_scenario(spec, executor="engine")
+        sim = run_scenario(spec, executor="netsim")
+        for re_, rn in zip(eng.rounds, sim.rounds):
+            assert re_.transmissions == rn.transmissions
+            assert re_.bytes_mb == pytest.approx(rn.bytes_mb)
+            assert re_.n_slots == rn.n_slots
+            assert re_.members == rn.members
+            assert re_.moderator == rn.moderator
+
+    def test_plan_matches_engine_accounting(self):
+        spec = scenarios.get("churn_storm")
+        plan = run_scenario(spec, executor="plan")
+        eng = run_scenario(spec, executor="engine")
+        assert [r.transmissions for r in plan.rounds] == \
+               [r.transmissions for r in eng.rounds]
+        assert [r.n_slots for r in plan.rounds] == \
+               [r.n_slots for r in eng.rounds]
+
+
+class TestChurnAndDrops:
+    def test_churn_storm_membership_trajectory(self):
+        res = run_scenario(scenarios.get("churn_storm"), executor="engine")
+        assert [len(r.members) for r in res.rounds] == [12, 11, 10, 9, 10, 11]
+        # dissemination over k members is always k(k-1) transmissions
+        assert [r.transmissions for r in res.rounds] == \
+               [k * (k - 1) for k in (12, 11, 10, 9, 10, 11)]
+        # the round-2 event removed the then-current moderator
+        assert any(ev["node"] == 2 for ev in res.rounds[2].churn_applied)
+        assert res.rounds[2].moderator in res.rounds[2].members
+
+    def test_rejoined_node_is_back_in_the_schedule(self):
+        res = run_scenario(scenarios.get("churn_storm"), executor="engine")
+        assert 3 not in res.rounds[1].members
+        assert 3 in res.rounds[4].members
+
+    def test_lossy_links_retransmits_and_completes(self):
+        spec = scenarios.get("lossy_links")
+        res = run_scenario(spec, executor="engine")
+        n = spec.n
+        assert res.total_drops > 0
+        # every drop is retransmitted (the whole multicast entry re-emits,
+        # paper III-D), so attempted strictly exceeds the failure-free count
+        assert res.total_transmissions >= spec.rounds * n * (n - 1) + res.total_drops
+        assert res.rounds[0].bytes_mb > n * (n - 1) * spec.payload_mb() * 0.99
+
+    def test_drop_runs_are_seed_deterministic(self):
+        spec = scenarios.get("lossy_links")
+        a = run_scenario(spec, executor="engine")
+        b = run_scenario(spec, executor="engine")
+        assert a.total_drops == b.total_drops
+        assert a.total_transmissions == b.total_transmissions
+
+    def test_churn_below_two_nodes_rejected(self):
+        spec = ScenarioSpec(
+            overlay=TopologySpec(kind="complete", n=3, seed=0),
+            rounds=3,
+            churn=(ChurnEvent(1, "leave", 0), ChurnEvent(2, "leave", 1)))
+        res = run_scenario(spec, executor="plan")  # leaves are refused at n=2
+        assert [len(r.members) for r in res.rounds] == [3, 2, 2]
+
+
+class TestSpecValidation:
+    def test_unknown_protocol(self):
+        with pytest.raises(ValueError, match="unknown protocol"):
+            ScenarioSpec(protocol="carrier-pigeon").validate()
+
+    def test_churn_out_of_range(self):
+        with pytest.raises(ValueError, match="outside round range"):
+            ScenarioSpec(rounds=2, churn=(ChurnEvent(5, "leave", 1),)).validate()
+        with pytest.raises(ValueError, match="outside"):
+            ScenarioSpec(rounds=2, churn=(ChurnEvent(0, "leave", 99),)).validate()
+
+    def test_bad_churn_action(self):
+        with pytest.raises(ValueError, match="unknown churn action"):
+            ScenarioSpec(rounds=2, churn=(ChurnEvent(0, "explode", 1),)).validate()
+
+    def test_explicit_cost_matrix_overlay(self):
+        adj = np.array([[0, 1, 2], [1, 0, 1], [2, 1, 0]], dtype=float)
+        spec = ScenarioSpec(overlay=adj, payload=5.0)
+        assert spec.n == 3
+        res = run_scenario(spec, executor="engine")
+        assert res.total_transmissions == 3 * 2
+
+
+class TestPayloadResolution:
+    def test_raw_mb_passthrough(self):
+        assert resolve_payload_mb(14.0) == 14.0
+
+    def test_paper_payload_code_and_name(self):
+        assert resolve_payload_mb("b0") == pytest.approx(21.2)
+        assert resolve_payload_mb("EfficientNet-B0") == pytest.approx(21.2)
+        assert resolve_payload_mb("v3s") == pytest.approx(11.6)
+
+    def test_arch_name_resolves_to_bf16_bytes(self):
+        from repro.configs import get_arch
+
+        mb = resolve_payload_mb("smollm-360m")
+        assert mb == pytest.approx(get_arch("smollm-360m").param_count() * 2 / 1e6)
+
+    def test_unknown_payload_raises(self):
+        with pytest.raises(ValueError, match="unknown payload"):
+            resolve_payload_mb("not-a-model")
+        with pytest.raises(ValueError, match="positive"):
+            resolve_payload_mb(-3.0)
+
+
+class TestSerialization:
+    def test_result_round_trips_through_json(self):
+        res = run_scenario(scenarios.get("churn_storm"), executor="netsim")
+        d = json.loads(res.to_json())
+        assert d["scenario"] == "churn_storm"
+        assert d["executor"] == "netsim"
+        assert d["totals"]["rounds"] == 6
+        assert d["totals"]["transmissions"] == res.total_transmissions
+        assert d["totals"]["time_s"] == pytest.approx(res.total_time_s)
+        assert len(d["rounds_detail"]) == 6
+        assert d["rounds_detail"][1]["churn_applied"] == [
+            {"round": 1, "action": "leave", "node": 3}]
+        assert d["spec"]["overlay"]["kind"] == "watts_strogatz"
+        assert d["spec"]["payload_mb"] == pytest.approx(14.0)
+
+    def test_spec_with_matrix_overlay_serializes(self):
+        adj = [[0, 1], [1, 0]]
+        d = ScenarioSpec(overlay=np.array(adj, float), payload=1.0).to_dict()
+        assert d["overlay"]["type"] == "cost_matrix"
+        json.dumps(d)
+
+
+class TestUnderlayDerivation:
+    def test_default_overlay_reproduces_paper_testbed(self):
+        """from_overlay with default costs == the historical TestbedSpec."""
+        t = TestbedSpec.from_overlay(TopologySpec(kind="erdos_renyi", n=10))
+        ref = TestbedSpec(n=10)
+        assert t == ref
+
+    def test_slower_overlay_scales_latency(self):
+        topo = TopologySpec(kind="complete", n=10,
+                            intra_cost_ms=(0.8, 3.0), inter_cost_ms=(16.0, 80.0))
+        t = TestbedSpec.from_overlay(topo)
+        assert t.base_latency_s == pytest.approx(0.15 * 1.9 / 0.95)
+        assert t.hop_latency_s == pytest.approx(0.35 * 2.0)
+
+    def test_subnet_assignment_is_shared(self):
+        """graph.subnet_of is the single implementation: overlay costs and
+        underlay routing can never disagree."""
+        topo = TopologySpec(kind="complete", n=10, n_subnets=3)
+        t = TestbedSpec.from_overlay(topo)
+        for u in range(10):
+            assert topo.subnet(u) == t.subnet(u) == subnet_of(u, 10, 3)
+
+    def test_churn_masked_testbed_keeps_physical_subnets(self):
+        t = dataclasses.replace(TestbedSpec(n=10), n=3,
+                                node_ids=(0, 5, 9), phys_n=10)
+        assert [t.subnet(i) for i in range(3)] == [
+            subnet_of(0, 10, 3), subnet_of(5, 10, 3), subnet_of(9, 10, 3)]
+
+    def test_explicit_underlay_keeps_its_declared_layout(self):
+        """An explicit TestbedSpec larger than the overlay must keep its own
+        subnet geometry under the runner's dense member reindexing."""
+        from repro.scenario.runner import _member_testbed
+
+        spec = ScenarioSpec(
+            overlay=TopologySpec(kind="complete", n=10, seed=0),
+            underlay=TestbedSpec(n=20, n_subnets=3), payload=5.0)
+        t = _member_testbed(spec, list(range(10)))
+        assert [t.subnet(i) for i in range(10)] == [
+            subnet_of(i, 20, 3) for i in range(10)]
+
+
+class TestJaxExecutor:
+    def test_mesh_smoke_on_jax_executor(self):
+        """mesh_smoke's second executor: the compiled ppermute path with
+        churn masking produces the exact FedAvg mean of the healthy members
+        and the same transmission accounting as the counting executor."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        code = textwrap.dedent("""
+            from repro.scenario import run_scenario, scenarios
+            spec = scenarios.get("mesh_smoke")
+            jx = run_scenario(spec, executor="jax")
+            pl = run_scenario(spec, executor="plan")
+            tx_match = ([r.transmissions for r in jx.rounds]
+                        == [r.transmissions for r in pl.rounds])
+            print("OK", all(r.numerics_ok for r in jx.rounds), tx_match,
+                  jx.rounds[1].members == [0, 1, 2])
+        """)
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, timeout=520)
+        assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+        assert out.stdout.strip() == "OK True True True"
+
+
+class TestBackCompatFrontDoors:
+    def test_compare_protocols_delegates_identically(self):
+        """netsim.compare_protocols is a wrapper over the scenario API."""
+        old_style = netsim_compare("complete", 14.0, seed=0)
+        assert old_style["broadcast"].n_transfers == 90
+        assert old_style["mosgu"].n_transfers == 2 * 9
+
+    def test_compare_protocols_full_dissemination(self):
+        r = netsim_compare("complete", 14.0, seed=0, full_dissemination=True)
+        assert r["mosgu"].n_transfers == 90
+        assert r["broadcast"].n_transfers >= 90
+
+    def test_compare_protocols_explicit_spec_respected(self):
+        spec = TestbedSpec(n=10, access_mbps=24.0)
+        r = netsim_compare("complete", 14.0, seed=0, spec=spec)
+        r_default = netsim_compare("complete", 14.0, seed=0)
+        assert (r["mosgu"].total_time_s < r_default["mosgu"].total_time_s)
+
+    def test_scenario_compare_matches_netsim_wrapper(self):
+        a = compare_protocols("erdos_renyi", 21.2, seed=3,
+                              protocols=("mosgu", "segmented"))
+        b = netsim_compare("erdos_renyi", 21.2, seed=3,
+                           protocols=("mosgu", "segmented"))
+        for k in a:
+            assert a[k].total_time_s == pytest.approx(b[k].total_time_s)
+            assert a[k].n_transfers == b[k].n_transfers
+
+    def test_smoke_benchmark_rows_unchanged(self):
+        """netsim_bench (now scenario-driven) reproduces the historical
+        BENCH_netsim.json numbers for the paper cell."""
+        import pathlib
+        import sys
+
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                               / "benchmarks"))
+        try:
+            from gossip_traffic import netsim_bench
+        finally:
+            sys.path.pop(0)
+        bench = netsim_bench()
+        mosgu = bench["protocols"]["mosgu"]
+        assert mosgu["slots"] == 22
+        assert mosgu["transmissions"] == 90
+        assert mosgu["total_time_s"] == pytest.approx(104.4216)
+        flood = bench["protocols"]["flooding"]
+        assert flood["transmissions"] == 400
+        assert flood["total_time_s"] == pytest.approx(247.1706)
