@@ -8,12 +8,15 @@ vectorized reference executor.
 
 Standalone usage (CI perf trajectory):
 
-  PYTHONPATH=src python benchmarks/gossip_traffic.py --smoke --scenarios
+  PYTHONPATH=src python benchmarks/gossip_traffic.py --smoke --scenarios --codec
 
 writes ``BENCH_netsim.json`` with slots / total-time / transmissions per
-protocol on the paper's 10-node testbed, and (with ``--scenarios``)
+protocol on the paper's 10-node testbed, (with ``--scenarios``)
 ``BENCH_scenarios.json`` — one registry scenario per executor through the
-declarative scenario API (:mod:`repro.scenario`).
+declarative scenario API (:mod:`repro.scenario`) — and (with ``--codec``)
+``BENCH_codec.json``: compression ratio / bandwidth / total round time per
+payload codec vs the fp32 baseline on the paper_table3 cell.
+``--list`` prints the scenario registry and exits.
 """
 from __future__ import annotations
 
@@ -156,9 +159,53 @@ def scenario_bench() -> list:
     return results
 
 
+def codec_bench(scenario: str = "paper_table3") -> dict:
+    """Per-codec netsim metrics on one scenario cell vs its fp32 baseline.
+
+    Deterministic given the scenario: same overlay, same schedule, same
+    transmission count per codec — only the per-transfer wire bytes change,
+    which is exactly the axis the codec subsystem adds.
+    """
+    from repro.compress import CODEC_NAMES
+
+    base = scenarios.get(scenario)
+    rows = {}
+    fp32_time = run_scenario(base.replace(codec="fp32"),
+                             executor="netsim").total_time_s
+    for name in CODEC_NAMES:
+        res = run_scenario(base.replace(codec=name), executor="netsim")
+        row = res.rounds[0]
+        rows[name] = {
+            "compression_ratio": round(
+                res.total_bytes_on_wire_mb / res.total_bytes_mb, 6),
+            "bytes_mb": round(res.total_bytes_mb, 4),
+            "bytes_on_wire_mb": round(res.total_bytes_on_wire_mb, 4),
+            "transmissions": res.total_transmissions,
+            "total_time_s": round(res.total_time_s, 4),
+            "mean_bandwidth_mbps": round(row.mean_bandwidth_mbps, 4),
+            "speedup_vs_fp32": round(fp32_time / res.total_time_s, 4),
+        }
+    return {"scenario": scenario, "payload_mb": base.payload_mb(),
+            "codecs": rows}
+
+
+def list_scenarios() -> None:
+    width = max(len(n) for n in scenarios.names())
+    for name in scenarios.names():
+        spec = scenarios.get(name)
+        print(f"{name:{width}s}  protocol={spec.protocol:18s} "
+              f"codec={spec.codec:5s} rounds={spec.rounds:2d} "
+              f"executors={','.join(spec.executors)}")
+        print(f"{'':{width}s}  {spec.description}")
+
+
 def main(argv) -> int:
+    if "--list" in argv:
+        list_scenarios()
+        return 0
     smoke = "--smoke" in argv
     with_scenarios = "--scenarios" in argv
+    with_codec = "--codec" in argv
     if with_scenarios:
         # the jax-executor scenario needs a multi-device (CPU) mesh; must be
         # set before jax initializes, and must compose with any XLA_FLAGS
@@ -180,6 +227,17 @@ def main(argv) -> int:
         with open("BENCH_scenarios.json", "w") as f:
             json.dump(results, f, indent=2)
         print(f"wrote BENCH_scenarios.json ({len(results)} scenario runs)")
+    if with_codec:
+        cb = codec_bench()
+        with open("BENCH_codec.json", "w") as f:
+            json.dump(cb, f, indent=2)
+        print(f"wrote BENCH_codec.json ({cb['scenario']}, "
+              f"{cb['payload_mb']}MB model)")
+        for name, row in cb["codecs"].items():
+            print(f"  {name:5s} ratio={row['compression_ratio']:.3f} "
+                  f"wire={row['bytes_on_wire_mb']:8.1f}MB "
+                  f"round={row['total_time_s']:7.2f}s "
+                  f"speedup={row['speedup_vs_fp32']:.2f}x")
     if not smoke:
         csv_rows = []
         run(csv_rows)

@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--gossip", default="tree_allreduce")
+    ap.add_argument("--codec", default="",
+                    help="gossip payload codec (bf16/int8/int4/topk); topk "
+                         "carries error-feedback residuals across rounds")
     ap.add_argument("--scenario", default="",
                     help="registry scenario driving protocol + churn")
     args = ap.parse_args()
@@ -43,8 +46,11 @@ def main():
         scenario = scenarios.get(args.scenario)
         args.gossip = resolve_gossip_mode(scenario.protocol)
         args.steps = scenario.rounds
+        if not args.codec:
+            args.codec = scenario.codec if scenario.codec != "fp32" else ""
         print(f"scenario {scenario.name!r}: protocol={scenario.protocol} "
-              f"rounds={args.steps} churn={[e.to_dict() for e in scenario.churn]}")
+              f"rounds={args.steps} codec={args.codec or 'fp32'} "
+              f"churn={[e.to_dict() for e in scenario.churn]}")
 
     from repro.configs import get_arch
     from repro.data import DataConfig, FederatedData
@@ -61,6 +67,7 @@ def main():
     print(f"model: {cfg.param_count()/1e6:.1f}M params | mesh {dict(mesh.shape)}")
 
     trainer = DFLTrainer(model, mesh, DFLConfig(gossip_mode=args.gossip,
+                                                codec=args.codec,
                                                 lr=3e-3, warmup=20,
                                                 total_steps=args.steps))
     plan = trainer.plan

@@ -1,0 +1,25 @@
+"""Payload codec subsystem: quantized & sparsified gossip wire formats.
+
+    from repro.compress import make_codec
+
+    codec = make_codec("int8")
+    payload, state = codec.encode(pytree)      # exact payload.bytes_on_wire
+    restored = codec.decode(payload)
+
+Every executor's byte accounting goes through :func:`per_send_wire_mb` /
+:meth:`Codec.wire_bytes`, so "bytes on the wire" means the same thing on the
+counting path, the queue engine, the fluid simulator, and the compiled JAX
+collectives. See DESIGN.md §10.
+"""
+from .codec import (  # noqa: F401
+    CODEC_NAMES,
+    Bf16Codec,
+    Codec,
+    EncodedPayload,
+    IdentityCodec,
+    TopKCodec,
+    UniformQuantCodec,
+    make_codec,
+    per_send_wire_bytes,
+    per_send_wire_mb,
+)

@@ -1,0 +1,519 @@
+"""Payload codecs: how many bytes one gossip transfer actually costs.
+
+The paper's central finding is the correlation between model size and
+network latency — every bandwidth / transfer-time win in Tables III–V comes
+from moving fewer bytes through contended links. The plan IR (PR 1) decides
+*where* bytes go and segmented gossip decides *what* each slot carries; a
+codec decides *how many bytes* each payload costs on the wire.
+
+A :class:`Codec` turns a numpy pytree (a model, or one gossip segment) into
+an :class:`EncodedPayload` with an **exact** ``bytes_on_wire``, and back.
+The same object also answers the purely *analytic* question every counting
+executor asks — :meth:`Codec.wire_bytes` — and the two are pinned to agree:
+``encode(x).bytes_on_wire == sum(wire_bytes(leaf.size))`` for every codec
+(tested). That single function is what makes byte accounting consistent
+across the plan counting path, the queue engine, the fluid network
+simulator, and the JAX collectives.
+
+Concrete codecs:
+
+==========  =================================================================
+``fp32``    :class:`IdentityCodec` — raw float32, 4 bytes/element (baseline)
+``bf16``    :class:`Bf16Codec` — round-to-nearest-even bfloat16 cast, 2 B/el
+``int8``    :class:`UniformQuantCodec(bits=8)` — per-chunk absmax scales
+``int4``    :class:`UniformQuantCodec(bits=4)` — two codes per byte
+``topk``    :class:`TopKCodec` — block-local top-k sparsification with
+            per-node **error-feedback** residuals (DGC/EF-SGD style)
+==========  =================================================================
+
+Error feedback: lossy-by-omission codecs (top-k) carry a residual state —
+what encode dropped this round is added back to next round's input, so the
+*accumulated* transmitted signal converges to the true signal even though
+each individual payload is sparse. State is per sender; executors thread it
+via :meth:`Codec.init_state` / the ``state`` argument of :meth:`encode`.
+
+The host implementations here are pure numpy (no jax import at module
+scope); the JAX hooks (:meth:`Codec.jax_encode` / :meth:`jax_decode` /
+:meth:`jax_roundtrip`) lazily dispatch to the Pallas kernels in
+:mod:`repro.kernels.codec` so compiled collectives put genuinely smaller
+buffers on the wire.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers (nested dict / list / tuple of ndarrays, as fedavg_numpy)
+# ---------------------------------------------------------------------------
+
+
+def tree_map(fn, *trees):
+    t0 = trees[0]
+    if isinstance(t0, dict):
+        return {k: tree_map(fn, *[t[k] for t in trees]) for k in t0}
+    if isinstance(t0, (list, tuple)):
+        return type(t0)(tree_map(fn, *parts) for parts in zip(*trees))
+    return fn(*trees)
+
+
+def tree_leaves(tree) -> List[np.ndarray]:
+    out: List[np.ndarray] = []
+
+    def walk(t):
+        if isinstance(t, dict):
+            for k in sorted(t):
+                walk(t[k])
+        elif isinstance(t, (list, tuple)):
+            for x in t:
+                walk(x)
+        else:
+            out.append(t)
+
+    walk(tree)
+    return out
+
+
+def tree_size(tree) -> int:
+    return int(sum(np.asarray(l).size for l in tree_leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# wire container
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class WireLeaf:
+    """One encoded tensor. Opaque to the tree walkers (a plain dict would be
+    recursed into by :func:`tree_map`)."""
+
+    data: Dict[str, Any]
+
+    def __getitem__(self, key: str) -> Any:
+        return self.data[key]
+
+
+@dataclass
+class EncodedPayload:
+    """One payload as it crosses a link: opaque data + exact byte count."""
+
+    codec: str
+    data: PyTree  # WireLeaf per tensor, mirroring the input tree structure
+    bytes_on_wire: int
+
+    def nbytes(self) -> int:
+        return self.bytes_on_wire
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """Payload codec: exact wire bytes, encode/decode, optional EF state.
+
+    Subclasses implement the per-leaf hooks (``_encode_leaf`` /
+    ``_decode_leaf`` / ``wire_bytes``); the pytree plumbing, byte totals and
+    the analytic helpers live here. ``decode(encode(x))`` always returns
+    float32 leaves with the input shapes.
+    """
+
+    name: str = "abstract"
+    lossless: bool = False
+    error_feedback: bool = False
+
+    # -- analytic accounting (the single source of truth) -------------------
+    def wire_bytes(self, n_elements: int) -> int:
+        """Exact bytes on the wire for a payload of ``n_elements`` float32
+        values. Counting executors use this; ``encode`` must match it."""
+        raise NotImplementedError
+
+    def wire_mb(self, raw_mb: float) -> float:
+        """Wire megabytes for a payload declared as ``raw_mb`` MB of fp32."""
+        return self.wire_bytes(int(round(raw_mb * 1e6 / 4))) / 1e6
+
+    def ratio(self, n_elements: int = 1 << 20) -> float:
+        """Compression ratio vs raw fp32 (< 1 means smaller on the wire)."""
+        return self.wire_bytes(n_elements) / (4 * n_elements)
+
+    def mean_atol(self, max_abs: float) -> Optional[float]:
+        """Worst-case per-element error of one encode at input magnitude
+        ``max_abs``; ``None`` = no useful deterministic bound (sparsifiers).
+        Executors use it to verify lossy collective numerics."""
+        return 0.0 if self.lossless else None
+
+    # -- error-feedback state ------------------------------------------------
+    def init_state(self) -> Any:
+        """Fresh per-sender residual state (None for stateless codecs)."""
+        return None
+
+    # -- pytree encode/decode -------------------------------------------------
+    def encode(self, tree: PyTree, state: Any = None) -> Tuple[EncodedPayload, Any]:
+        """Encode a numpy pytree; returns (payload, new_state)."""
+        total = 0
+
+        def enc(leaf):
+            nonlocal total
+            x = np.asarray(leaf, dtype=np.float32)
+            data = self._encode_leaf(x)
+            total += self.wire_bytes(x.size)
+            return WireLeaf(data) if isinstance(data, dict) else data
+
+        data = tree_map(enc, tree)
+        return EncodedPayload(self.name, data, total), state
+
+    def decode(self, payload: EncodedPayload) -> PyTree:
+        if payload.codec != self.name:
+            raise ValueError(
+                f"payload encoded with {payload.codec!r}, decoding with {self.name!r}")
+        return tree_map(self._decode_leaf, payload.data)
+
+    def roundtrip(self, tree: PyTree, state: Any = None) -> Tuple[PyTree, Any]:
+        payload, state = self.encode(tree, state)
+        return self.decode(payload), state
+
+    # -- per-leaf hooks --------------------------------------------------------
+    def _encode_leaf(self, x: np.ndarray) -> Any:
+        raise NotImplementedError
+
+    def _decode_leaf(self, data: Any) -> np.ndarray:
+        raise NotImplementedError
+
+    # -- JAX hooks (lazy: keep this module numpy-only at import time) ----------
+    def jax_encode(self, t) -> Any:
+        """Encode one jax array into a pytree of wire arrays (what ppermute
+        actually moves). Default: the identity single-array tuple."""
+        return (t,)
+
+    def jax_decode(self, enc, shape, dtype):
+        """Inverse of :meth:`jax_encode`; static (shape, dtype) of the raw
+        payload come from the caller (they are trace-time constants)."""
+        return enc[0]
+
+    def jax_roundtrip(self, t):
+        """decode(encode(t)) as one traced op — what a hop does to values."""
+        return self.jax_decode(self.jax_encode(t), t.shape, t.dtype)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"{type(self).__name__}({self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# fp32 identity (the baseline every table compares against)
+# ---------------------------------------------------------------------------
+
+
+class IdentityCodec(Codec):
+    """Raw float32 on the wire — the paper's measurement baseline."""
+
+    name = "fp32"
+    lossless = True
+
+    def wire_bytes(self, n_elements: int) -> int:
+        return 4 * n_elements
+
+    def wire_mb(self, raw_mb: float) -> float:
+        # exact passthrough: fp32 accounting must be bit-identical to the
+        # pre-codec pipeline (pinned by the back-compat benchmark tests)
+        return raw_mb
+
+    def _encode_leaf(self, x: np.ndarray) -> np.ndarray:
+        return x
+
+    def _decode_leaf(self, data: np.ndarray) -> np.ndarray:
+        return data
+
+    def jax_roundtrip(self, t):
+        return t
+
+
+# ---------------------------------------------------------------------------
+# bf16 cast
+# ---------------------------------------------------------------------------
+
+
+class Bf16Codec(Codec):
+    """bfloat16 on the wire: keep fp32's exponent range, drop 16 mantissa
+    bits (≤ 2^-8 relative error), halve every transfer."""
+
+    name = "bf16"
+
+    def wire_bytes(self, n_elements: int) -> int:
+        return 2 * n_elements
+
+    def mean_atol(self, max_abs: float) -> Optional[float]:
+        return max_abs * 2.0 ** -8
+
+    def _encode_leaf(self, x: np.ndarray) -> Dict[str, Any]:
+        u = x.view(np.uint32)
+        # round-to-nearest-even truncation to the upper 16 bits
+        rounded = u + (((u >> 16) & 1) + 0x7FFF)
+        return {"bits": (rounded >> 16).astype(np.uint16), "shape": x.shape}
+
+    def _decode_leaf(self, data: Dict[str, Any]) -> np.ndarray:
+        u = data["bits"].astype(np.uint32) << 16
+        return u.view(np.float32).reshape(data["shape"])
+
+    def jax_encode(self, t):
+        import jax.numpy as jnp
+
+        return (t.astype(jnp.bfloat16),)
+
+    def jax_decode(self, enc, shape, dtype):
+        return enc[0].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# uniform int8 / int4 quantization with per-chunk absmax scales
+# ---------------------------------------------------------------------------
+
+
+class UniformQuantCodec(Codec):
+    """Symmetric uniform quantization, one float32 scale per ``chunk``.
+
+    ``q = clip(round(x / scale), -qmax, qmax)`` with ``scale = absmax / qmax``
+    per chunk; int4 packs two codes per byte. Requantizing a decoded payload
+    is exact (absmax quantizes to ±qmax, so the scale is reconstructed), so
+    multi-hop gossip pays the quantization error exactly once.
+    """
+
+    def __init__(self, bits: int = 8, chunk: int = 1024) -> None:
+        if bits not in (4, 8):
+            raise ValueError(f"bits must be 4 or 8, got {bits}")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if bits == 4 and chunk % 2:
+            raise ValueError("int4 packs two codes per byte: chunk must be even")
+        self.bits = bits
+        self.chunk = chunk
+        self.qmax = 2 ** (bits - 1) - 1
+        self.name = f"int{bits}"
+
+    def wire_bytes(self, n_elements: int) -> int:
+        n_chunks = -(-n_elements // self.chunk)
+        code_bytes = -(-n_elements * self.bits // 8)
+        return code_bytes + 4 * n_chunks  # one f32 scale per chunk
+
+    def mean_atol(self, max_abs: float) -> Optional[float]:
+        # round() error ≤ scale/2 ≤ max_abs / (2 qmax); one ulp of slack for
+        # the f32 divides
+        return max_abs / (2 * self.qmax) * 1.01 + 1e-7
+
+    # -- numpy -----------------------------------------------------------------
+    def _chunked(self, x: np.ndarray) -> np.ndarray:
+        flat = x.reshape(-1)
+        pad = (-flat.size) % self.chunk
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        return flat.reshape(-1, self.chunk)
+
+    def _encode_leaf(self, x: np.ndarray) -> Dict[str, Any]:
+        c = self._chunked(x)
+        absmax = np.abs(c).max(axis=1)
+        scale = np.where(absmax > 0, absmax / self.qmax, 1.0).astype(np.float32)
+        q = np.clip(np.round(c / scale[:, None]), -self.qmax, self.qmax)
+        q = q.astype(np.int8)
+        if self.bits == 4:
+            flat = q.reshape(-1)
+            lo, hi = flat[0::2] & 0xF, (flat[1::2] & 0xF) << 4
+            q = (lo | hi).astype(np.uint8)
+        return {"codes": q, "scales": scale, "shape": x.shape, "size": x.size}
+
+    def _decode_leaf(self, data: Dict[str, Any]) -> np.ndarray:
+        q, scale = data["codes"], data["scales"]
+        if self.bits == 4:
+            lo = (q & 0xF).astype(np.int8)
+            hi = ((q >> 4) & 0xF).astype(np.int8)
+            # sign-extend 4-bit two's complement
+            lo, hi = (np.where(v >= 8, v - 16, v) for v in (lo, hi))
+            q = np.stack([lo, hi], axis=-1).reshape(-1, self.chunk)
+        x = q.astype(np.float32) * scale[:, None]
+        return x.reshape(-1)[: data["size"]].reshape(data["shape"])
+
+    # -- jax ---------------------------------------------------------------------
+    def jax_encode(self, t):
+        from ..kernels.codec.ops import quantize_op
+
+        codes, scales = quantize_op(t, bits=self.bits, chunk=self.chunk)
+        return (codes, scales)
+
+    def jax_decode(self, enc, shape, dtype):
+        from ..kernels.codec.ops import dequantize_op
+
+        codes, scales = enc
+        return dequantize_op(codes, scales, size=int(np.prod(shape)) if shape else 1,
+                             bits=self.bits, chunk=self.chunk
+                             ).reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-local top-k sparsification with error feedback
+# ---------------------------------------------------------------------------
+
+
+class TopKCodec(Codec):
+    """Keep the top ``k = max(1, round(fraction·block))`` entries by
+    magnitude of every ``block`` consecutive values; send (value, index)
+    pairs (8 bytes each — f32 value + i32 index, the DGC wire format).
+
+    Block-local selection keeps every shape static, which is what lets the
+    Pallas kernel (:mod:`repro.kernels.codec.topk_pack`) and the compiled
+    ppermute path move real sparse buffers. Re-encoding a decoded payload is
+    exact (a k-sparse block's top-k is itself), so multi-hop forwarding is
+    lossless after the first encode.
+
+    Error feedback: ``state`` holds what previous encodes dropped; encode
+    adds it back first and keeps the new leftovers, so the round-averaged
+    transmitted signal tracks the true signal (EF-SGD).
+    """
+
+    error_feedback = True
+
+    def __init__(self, fraction: float = 0.05, block: int = 256) -> None:
+        if not (0.0 < fraction <= 1.0):
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        if block < 1:
+            raise ValueError("block must be >= 1")
+        self.fraction = fraction
+        self.block = block
+        self.k = max(1, int(round(fraction * block)))
+        self.name = "topk"
+
+    def wire_bytes(self, n_elements: int) -> int:
+        n_blocks = -(-n_elements // self.block)
+        return 8 * self.k * n_blocks
+
+    def init_state(self) -> Any:
+        return {}  # leaf path -> residual array, filled lazily
+
+    # -- numpy (overrides the tree walk to thread per-leaf residuals) ----------
+    def encode(self, tree: PyTree, state: Any = None) -> Tuple[EncodedPayload, Any]:
+        new_state: Dict[str, np.ndarray] = {}
+        total = 0
+        path: List[str] = []
+
+        def enc(leaf):
+            nonlocal total
+            x = np.asarray(leaf, dtype=np.float32)
+            key = "/".join(path)
+            if state and key in state:
+                x = x + state[key]
+            data, residual = self._encode_leaf_ef(x)
+            new_state[key] = residual
+            total += self.wire_bytes(x.size)
+            return WireLeaf(data)
+
+        def walk(t):
+            if isinstance(t, dict):
+                return {k: _at(k, t[k]) for k in t}
+            if isinstance(t, (list, tuple)):
+                return type(t)(_at(str(i), x) for i, x in enumerate(t))
+            return enc(t)
+
+        def _at(key, sub):
+            path.append(key)
+            try:
+                return walk(sub)
+            finally:
+                path.pop()
+
+        data = walk(tree)
+        return EncodedPayload(self.name, data, total), new_state
+
+    def _blocked(self, x: np.ndarray) -> np.ndarray:
+        flat = x.reshape(-1)
+        pad = (-flat.size) % self.block
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        return flat.reshape(-1, self.block)
+
+    def _select(self, b: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k per row by |value|, ties to the lower index (matches the
+        kernel's iterative argmax)."""
+        order = np.argsort(-np.abs(b), axis=1, kind="stable")[:, : self.k]
+        idx = np.sort(order, axis=1)  # canonical order; selection is a set
+        vals = np.take_along_axis(b, idx, axis=1)
+        return vals.astype(np.float32), idx.astype(np.int32)
+
+    def _encode_leaf_ef(self, x: np.ndarray) -> Tuple[Dict[str, Any], np.ndarray]:
+        b = self._blocked(x)
+        vals, idx = self._select(b)
+        dense = np.zeros_like(b)
+        np.put_along_axis(dense, idx, vals, axis=1)
+        residual = (b - dense).reshape(-1)[: x.size].reshape(x.shape)
+        return ({"values": vals, "indices": idx, "shape": x.shape,
+                 "size": x.size}, residual)
+
+    def _encode_leaf(self, x: np.ndarray) -> Dict[str, Any]:
+        return self._encode_leaf_ef(x)[0]
+
+    def _decode_leaf(self, data: Dict[str, Any]) -> np.ndarray:
+        n_blocks = data["indices"].shape[0]
+        dense = np.zeros((n_blocks, self.block), np.float32)
+        np.put_along_axis(dense, data["indices"], data["values"], axis=1)
+        return dense.reshape(-1)[: data["size"]].reshape(data["shape"])
+
+    # -- jax -----------------------------------------------------------------
+    def jax_encode(self, t):
+        from ..kernels.codec.ops import topk_select_op
+
+        vals, idx = topk_select_op(t, k=self.k, block=self.block)
+        return (vals, idx)
+
+    def jax_decode(self, enc, shape, dtype):
+        from ..kernels.codec.ops import topk_scatter
+
+        vals, idx = enc
+        size = int(np.prod(shape)) if shape else 1
+        return topk_scatter(vals, idx, size=size, block=self.block
+                            ).reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+CODEC_NAMES = ("fp32", "bf16", "int8", "int4", "topk")
+
+
+def make_codec(name: Optional[str], **kwargs) -> Codec:
+    """Build a codec by wire-format name (``None``/"" = fp32 identity)."""
+    if name is None or name in ("", "fp32", "identity", "none"):
+        return IdentityCodec()
+    if name == "bf16":
+        return Bf16Codec()
+    if name == "int8":
+        return UniformQuantCodec(bits=8, **kwargs)
+    if name == "int4":
+        return UniformQuantCodec(bits=4, **kwargs)
+    if name == "topk":
+        return TopKCodec(**kwargs)
+    raise ValueError(f"unknown codec {name!r}; known: {CODEC_NAMES}")
+
+
+def per_send_wire_bytes(codec: Optional[Codec], raw_bytes: float) -> float:
+    """Wire bytes of one send carrying ``raw_bytes`` of fp32 payload — THE
+    per-send formula; every executor's byte accounting must route through
+    this (or :func:`per_send_wire_mb`) so cross-executor equality is a
+    property of the code, not a coincidence of copies."""
+    if codec is None:
+        return raw_bytes
+    return codec.wire_bytes(int(round(raw_bytes / 4)))
+
+
+def per_send_wire_mb(codec: Optional[Codec], payload_mb: float,
+                     payload_fraction: float = 1.0) -> float:
+    """:func:`per_send_wire_bytes` in MB, with ``payload_fraction`` applied
+    (1/S for segmented gossip). The no-codec path returns the raw size
+    untouched — fp32 accounting stays bit-identical to the legacy pipeline."""
+    raw = payload_mb * payload_fraction
+    if codec is None:
+        return raw
+    return per_send_wire_bytes(codec, raw * 1e6) / 1e6

@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
+from ..compress import Codec, EncodedPayload
 from .graph import Graph
 from .plan import CommPolicy, DisseminationPolicy, Send
 
@@ -66,6 +67,14 @@ class GossipEngine:
     ``drop_fn(slot_idx, src, dst)`` may return True to simulate a transient
     link failure; the policy then keeps the entry at the *head* of the
     sender's FIFO and it is retransmitted on the node's next active slot.
+
+    ``codec`` (a :class:`repro.compress.Codec`) puts the wire format in the
+    loop: each node's round payloads are *encoded* at ``begin_round`` (with
+    per-payload error-feedback residuals that persist across rounds — what
+    top-k drops this round is compensated next round), the queues move
+    :class:`EncodedPayload` objects whose exact ``bytes_on_wire`` are tallied
+    per round (``round_wire_bytes``), and :meth:`aggregate` decodes before
+    combining (FedAvg sees what actually crossed the network).
     """
 
     def __init__(
@@ -75,6 +84,7 @@ class GossipEngine:
         first_color: int = 0,
         drop_fn: Optional[Callable[[int, int, int], bool]] = None,
         policy: Optional[CommPolicy] = None,
+        codec: Optional[Codec] = None,
     ) -> None:
         if policy is None:
             if mst is None or colors is None:
@@ -93,6 +103,10 @@ class GossipEngine:
         self.reports: List[SlotReport] = []
         self._store: Dict[int, Any] = {}
         self._round_idx = 0
+        self.codec = codec
+        # per-payload-id error-feedback residuals; persist across rounds
+        self._ef_states: Dict[int, Any] = {}
+        self.round_wire_bytes = 0
 
     @property
     def n(self) -> int:
@@ -103,13 +117,14 @@ class GossipEngine:
         self.policy.reset()
         self._round_idx = round_idx
         self._store = {}
+        self.round_wire_bytes = 0
         for node in self.nodes:
             node.received.clear()
         for u, node in enumerate(self.nodes):
             pids = self.policy.initial_payload_ids(u)
             if payloads is not None and pids:
                 if len(pids) == 1:
-                    self._store[pids[0]] = payloads[u]
+                    self._store[pids[0]] = self._encode(pids[0], payloads[u])
                 else:
                     parts = payloads[u]
                     if not isinstance(parts, (list, tuple)) or len(parts) != len(pids):
@@ -117,9 +132,23 @@ class GossipEngine:
                             f"node {u}: segmented policies need one payload per "
                             f"segment ({len(pids)} expected)")
                     for pid, part in zip(pids, parts):
-                        self._store[pid] = part
+                        self._store[pid] = self._encode(pid, part)
             for pid in pids:
                 node.received[pid] = QueueEntry(pid, round_idx, self._store.get(pid), -1)
+
+    def _encode(self, pid: int, payload: Any) -> Any:
+        """Encode a node's own payload for the wire, carrying the payload's
+        error-feedback residual from the previous round."""
+        if self.codec is None or payload is None:
+            return payload
+        state = self._ef_states.get(pid, self.codec.init_state())
+        encoded, self._ef_states[pid] = self.codec.encode(payload, state)
+        return encoded
+
+    def _decode(self, payload: Any) -> Any:
+        if self.codec is not None and isinstance(payload, EncodedPayload):
+            return self.codec.decode(payload)
+        return payload
 
     def step(self) -> SlotReport:
         """Advance one colored slot."""
@@ -133,6 +162,9 @@ class GossipEngine:
                 report.dropped.append((src, dst, pid))
             else:
                 report.sends.append((src, dst, pid))
+            stored = self._store.get(pid)
+            if isinstance(stored, EncodedPayload):  # dropped sends burn wire too
+                self.round_wire_bytes += stored.bytes_on_wire
         delivered = self.policy.commit(self.slot_idx, sends, ok)
         for src, dst, pid in zip(delivered.src.tolist(), delivered.dst.tolist(),
                                  delivered.payload.tolist()):
@@ -169,16 +201,19 @@ class GossipEngine:
 
         For segmented policies each node returns a list of S per-segment
         aggregates (segment j combines every owner's j-th segment), which
-        concatenate back into the aggregated model.
+        concatenate back into the aggregated model. Codec-encoded payloads
+        are decoded first: FedAvg averages what crossed the network, not the
+        senders' local tensors.
         """
         S = getattr(self.policy, "segments", 1)
         out: List[Any] = []
         for nd in self.nodes:
             if S == 1:
-                out.append(combine([nd.received[o].payload for o in sorted(nd.received)]))
+                out.append(combine([self._decode(nd.received[o].payload)
+                                    for o in sorted(nd.received)]))
             else:
                 out.append([
-                    combine([nd.received[pid].payload
+                    combine([self._decode(nd.received[pid].payload)
                              for pid in sorted(nd.received) if pid % S == j])
                     for j in range(S)
                 ])

@@ -140,6 +140,9 @@ class SimResult:
     mean_bandwidth_mbps: float
     n_transfers: int
     max_concurrency: int
+    # Exact bytes that crossed links, MB: the sum of per-flow wire sizes
+    # (codec-encoded when simulate_policy ran with a payload codec).
+    bytes_on_wire_mb: float = 0.0
     per_transfer_s: List[float] = field(default_factory=list)
     # Optional launch trace for cross-executor equivalence tests:
     # send_trace[t] = the (src, dst, payload) flows launched in batch t
@@ -241,6 +244,7 @@ def _collect(sim: FluidSimulator, send_trace: Optional[List[List[Send]]] = None)
         mean_bandwidth_mbps=float(np.mean(rates)),
         n_transfers=len(durations),
         max_concurrency=sim.max_concurrency,
+        bytes_on_wire_mb=float(sum(f.size_mb for f in sim.finished)),
         per_transfer_s=durations,
         send_trace=send_trace,
     )
@@ -257,6 +261,7 @@ def simulate_policy(
     model_mb: float,
     record_trace: bool = False,
     max_slots: int = 100_000,
+    codec=None,
 ) -> SimResult:
     """Execute a communication policy on the fluid testbed.
 
@@ -265,9 +270,13 @@ def simulate_policy(
     thing; we report the achieved time, which the fixed slot would round up).
     Event policies launch follow-up flows the instant a delivery completes.
     Each flow carries ``model_mb × policy.payload_fraction`` MB (fractions
-    below 1 model segmented gossip).
+    below 1 model segmented gossip), encoded through ``codec`` (a
+    :class:`repro.compress.Codec`) when one is given — compressed transfers
+    are both smaller and, being shorter-lived, suffer less goodput collapse.
     """
-    size_mb = model_mb * policy.payload_fraction
+    from ..compress import per_send_wire_mb  # numpy-only, no cycle
+
+    size_mb = per_send_wire_mb(codec, model_mb, policy.payload_fraction)
     sim = FluidSimulator(spec, (size_mb / spec.collapse_ref_mb) ** 0.5)
     trace: Optional[List[List[Send]]] = [] if record_trace else None
     policy.reset()

@@ -93,9 +93,17 @@ class SlotPlan:
     def max_concurrent_sends(self) -> int:
         return max((len(s.sends) for s in self.slots), default=0)
 
-    def bytes_on_wire(self, model_bytes: float) -> float:
-        """Total bytes crossing links for one communication round."""
-        return self.total_transmissions() * model_bytes * self.payload_fraction
+    def bytes_on_wire(self, model_bytes: float, codec=None) -> float:
+        """Total bytes crossing links for one communication round.
+
+        ``codec`` (a :class:`repro.compress.Codec`) makes the accounting
+        wire-format aware: each send carries the codec's exact encoding of
+        its ``payload_fraction`` share of a ``model_bytes`` fp32 model.
+        """
+        from ..compress import per_send_wire_bytes  # numpy-only, no cycle
+
+        return self.total_transmissions() * per_send_wire_bytes(
+            codec, model_bytes * self.payload_fraction)
 
     def max_queue_depth(self) -> int:
         if not self.queue_trace:
@@ -752,9 +760,16 @@ def compile_policy(policy: CommPolicy, max_slots: int = 100_000,
     return plan
 
 
-def measure_policy(policy: CommPolicy, max_slots: int = 1_000_000) -> Dict[str, int]:
+def measure_policy(policy: CommPolicy, max_slots: int = 1_000_000,
+                   model_bytes: Optional[float] = None,
+                   codec=None) -> Dict[str, float]:
     """Run a slot policy to completion counting slots/transmissions without
-    materializing Python send tuples — the scale path for 1000+-node sweeps."""
+    materializing Python send tuples — the scale path for 1000+-node sweeps.
+
+    With ``model_bytes`` the stats include ``wire_bytes`` — the exact bytes
+    crossing links, codec-encoded when a :class:`repro.compress.Codec` is
+    given (each send carries ``payload_fraction`` of an fp32 model).
+    """
     policy.reset()
     t = 0
     transmissions = 0
@@ -768,8 +783,14 @@ def measure_policy(policy: CommPolicy, max_slots: int = 1_000_000) -> Dict[str, 
         transmissions += k
         max_concurrent = max(max_concurrent, k)
         t += 1
-    return {"n_slots": t, "transmissions": transmissions,
-            "max_concurrent_sends": max_concurrent}
+    stats: Dict[str, float] = {"n_slots": t, "transmissions": transmissions,
+                               "max_concurrent_sends": max_concurrent}
+    if model_bytes is not None:
+        from ..compress import per_send_wire_bytes  # numpy-only, no cycle
+
+        stats["wire_bytes"] = transmissions * per_send_wire_bytes(
+            codec, model_bytes * policy.payload_fraction)
+    return stats
 
 
 # ---------------------------------------------------------------------------

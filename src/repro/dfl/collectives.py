@@ -177,12 +177,14 @@ def _axis_name(node_axes: Sequence[str]):
 
 
 def _tree_allreduce_body(plan: GossipPlan, theta: PyTree,
-                         wire_dtype=None) -> PyTree:
+                         wire_dtype=None, codec=None) -> PyTree:
     """Colored-MST reduce + broadcast; returns the FedAvg mean on every node.
 
     ``wire_dtype`` (e.g. bf16) compresses the on-wire payload: partial sums
     accumulate in f32 locally but each hop transfers the cast value — halving
     the collective roofline term at ~2^-8 relative quantization per hop.
+    ``codec`` generalizes it: each hop permutes the codec's encoded buffers
+    (quantized partial sums), decoded on receipt.
     """
     if plan.n_nodes == 1:
         return theta
@@ -199,16 +201,21 @@ def _tree_allreduce_body(plan: GossipPlan, theta: PyTree,
             return t
         return jax.lax.optimization_barrier(t)
 
+    def hop(t, perm):
+        if codec is not None:
+            return _ppermute_wire(t, ax, perm, codec)
+        return rx(jax.lax.ppermute(tx(t), ax, perm))
+
     ax = _axis_name(plan.node_axes)
     nid = _node_index(plan.node_axes)
     acc = jax.tree.map(lambda t: t.astype(jnp.float32), theta)
     for step in plan.tree_steps[: plan.n_tree_reduce_steps]:
-        recv = jax.tree.map(lambda t: rx(jax.lax.ppermute(tx(t), ax, step.perm)), acc)
+        recv = jax.tree.map(lambda t: hop(t, step.perm), acc)
         acc = jax.tree.map(lambda a, r: a + r.astype(jnp.float32), acc, recv)
     val = acc
     for step in plan.tree_steps[plan.n_tree_reduce_steps:]:
         is_recv = jnp.take(jnp.asarray(step.recv_payload >= 0), nid)
-        recv = jax.tree.map(lambda t: rx(jax.lax.ppermute(tx(t), ax, step.perm)), val)
+        recv = jax.tree.map(lambda t: hop(t, step.perm), val)
         val = jax.tree.map(
             lambda r, v: jnp.where(is_recv, r.astype(jnp.float32), v), recv, val)
     # churn masking (dfl.session): nodes with color -1 are outside the healthy
@@ -221,12 +228,30 @@ def _tree_allreduce_body(plan: GossipPlan, theta: PyTree,
     return jax.tree.map(lambda v, t: (v / plan.n_nodes).astype(t.dtype), val, theta)
 
 
-def _apply_perm_steps(steps: Sequence[PermStep], buf: PyTree, ax, nid) -> PyTree:
+def _ppermute_wire(t, ax, perm, codec=None):
+    """One hop: permute ``t``'s wire representation.
+
+    With a codec the arrays that actually cross the collective are the
+    *encoded* buffers (int8 codes + scales, packed top-k values + indices…);
+    the receiver decodes. Without one this is a plain ``ppermute``.
+    """
+    if codec is None:
+        return jax.lax.ppermute(t, ax, perm)
+    enc = codec.jax_encode(t)
+    got = jax.tree.map(lambda e: jax.lax.ppermute(e, ax, perm), enc)
+    return codec.jax_decode(got, t.shape, t.dtype)
+
+
+def _apply_perm_steps(steps: Sequence[PermStep], buf: PyTree, ax, nid,
+                      codec=None) -> PyTree:
     """Run a compiled plan's ppermute steps over a slot-indexed buffer tree.
 
     Each leaf's leading dimension is the logical payload-slot axis the
     ``PermStep`` send/recv payload ids index into. Shared by every
     buffer-dissemination mode (dissemination, segmented, flooding plans).
+    With a codec, each hop permutes encoded buffers (re-encoding a decoded
+    payload is exact for every shipped codec, so forwarding pays the
+    compression error only once — at the original sender).
     """
     for step in steps:
         send_idx = jnp.take(jnp.asarray(step.send_payload), nid)
@@ -235,9 +260,9 @@ def _apply_perm_steps(steps: Sequence[PermStep], buf: PyTree, ax, nid) -> PyTree
         def one(b):
             payload = jax.lax.dynamic_index_in_dim(
                 b, jnp.maximum(send_idx, 0), 0, keepdims=False)
-            got = jax.lax.ppermute(payload, ax, step.perm)
+            got = _ppermute_wire(payload, ax, step.perm, codec)
             updated = jax.lax.dynamic_update_index_in_dim(
-                b, got, jnp.maximum(recv_idx, 0), 0)
+                b, got.astype(b.dtype), jnp.maximum(recv_idx, 0), 0)
             return jnp.where(recv_idx >= 0, updated, b)
 
         buf = jax.tree.map(one, buf)
@@ -253,33 +278,52 @@ def _buffer_row(plan: GossipPlan, nid) -> Tuple[jax.Array, Optional[jax.Array]]:
     return jnp.maximum(row, 0), row >= 0
 
 
-def _dissemination_body(plan: GossipPlan, theta: PyTree) -> Tuple[PyTree, PyTree]:
-    """Paper-faithful full dissemination. Returns (fedavg_mean, buffer)."""
+def _dissemination_body(plan: GossipPlan, theta: PyTree, codec=None,
+                        ef: Optional[PyTree] = None
+                        ) -> Tuple[PyTree, PyTree, Optional[PyTree]]:
+    """Paper-faithful full dissemination: (fedavg_mean, buffer, new_ef).
+
+    ``codec`` puts encoded buffers on every hop's wire. ``ef`` (a pytree of
+    f32 residuals mirroring ``theta``) enables error feedback: the node's
+    *own* contribution is ``decode(encode(theta + ef))`` and the leftovers
+    become the next round's residual, so a sparsifying codec's dropped
+    coordinates are compensated over rounds (EF-SGD). With EF every node
+    contributes the same decoded tensor it transmits, keeping the computed
+    mean identical across nodes.
+    """
     if plan.n_nodes == 1:
-        return theta, jax.tree.map(lambda t: t[None], theta)
+        return theta, jax.tree.map(lambda t: t[None], theta), ef
     ax = _axis_name(plan.node_axes)
     nid = _node_index(plan.node_axes)
     row, is_member = _buffer_row(plan, nid)
     n = plan.n_nodes
 
+    contrib, new_ef = theta, None
+    if codec is not None and ef is not None:
+        comp = jax.tree.map(lambda t, r: t.astype(jnp.float32) + r, theta, ef)
+        dec = jax.tree.map(codec.jax_roundtrip, comp)
+        new_ef = jax.tree.map(lambda c, d: c - d, comp, dec)
+        contrib = jax.tree.map(lambda d, t: d.astype(t.dtype), dec, theta)
+
     def init_buf(t):
         buf = jnp.zeros((n, *t.shape), t.dtype)
         return jax.lax.dynamic_update_index_in_dim(buf, t, row, 0)
 
-    buf = jax.tree.map(init_buf, theta)
-    buf = _apply_perm_steps(plan.diss_steps, buf, ax, nid)
+    buf = jax.tree.map(init_buf, contrib)
+    buf = _apply_perm_steps(plan.diss_steps, buf, ax, nid, codec=codec)
     mean = jax.tree.map(
         lambda b, t: jnp.mean(b.astype(jnp.float32), axis=0).astype(t.dtype), buf, theta)
     if is_member is not None:  # masked nodes keep their local params
         mean = jax.tree.map(lambda m, t: jnp.where(is_member, m, t), mean, theta)
-    return mean, buf
+    return mean, buf, new_ef
 
 
-def _segmented_body(plan: GossipPlan, theta: PyTree) -> PyTree:
+def _segmented_body(plan: GossipPlan, theta: PyTree, codec=None) -> PyTree:
     """Segmented gossip: each leaf is split into S flat segments; the buffer
     holds N·S segment slots (slot k = owner k//S, segment k%S) and the
     compiled segmented plan moves one segment per transfer. After full
-    dissemination every node reassembles all N models and takes the mean."""
+    dissemination every node reassembles all N models and takes the mean.
+    With a codec, every per-segment hop permutes encoded buffers."""
     if plan.n_nodes == 1:
         return theta
     ax = _axis_name(plan.node_axes)
@@ -300,7 +344,7 @@ def _segmented_body(plan: GossipPlan, theta: PyTree) -> PyTree:
         return jax.lax.dynamic_update_slice(buf, segs, (row * S, 0))
 
     buf = jax.tree.map(init_buf, theta)
-    buf = _apply_perm_steps(plan.seg_steps, buf, ax, nid)
+    buf = _apply_perm_steps(plan.seg_steps, buf, ax, nid, codec=codec)
 
     def reassemble_mean(b, t):
         models = b.reshape(n, S * b.shape[1])[:, : t.size]  # (N, |t|)
@@ -335,14 +379,19 @@ def _mixing_body(plan: GossipPlan, theta: PyTree, lam: float = 1.0) -> PyTree:
     return theta
 
 
-def _flooding_body(plan: GossipPlan, theta: PyTree) -> PyTree:
-    """Baseline: broadcast everything to everyone (all_gather), then mean."""
+def _flooding_body(plan: GossipPlan, theta: PyTree, codec=None) -> PyTree:
+    """Baseline: broadcast everything to everyone (all_gather), then mean.
+
+    With a codec the gathered *values* are the decode(encode(·)) roundtrip
+    (all_gather itself moves dense buffers; per-peer encoded transport needs
+    the permute-based modes)."""
     if plan.n_nodes == 1:
         return theta
     ax = _axis_name(plan.node_axes)
 
     def one(t):
-        allm = jax.lax.all_gather(t, ax)  # (N, ...)
+        tw = t if codec is None else codec.jax_roundtrip(t).astype(t.dtype)
+        allm = jax.lax.all_gather(tw, ax)  # (N, ...)
         return jnp.mean(allm.astype(jnp.float32), axis=0).astype(t.dtype)
 
     return jax.tree.map(one, theta)
@@ -367,6 +416,9 @@ GOSSIP_BODIES: Dict[str, Callable] = {
     "allreduce_ref": _allreduce_ref_body,
 }
 
+# modes whose wire a payload codec can encode (per-hop or pre-gather)
+CODEC_MODES = ("dissemination", "segmented", "tree_allreduce", "flooding")
+
 
 def gossip_exchange(
     mode: str,
@@ -375,42 +427,91 @@ def gossip_exchange(
     params: PyTree,
     param_specs: PyTree,
     wire_dtype=None,
+    codec=None,
+    ef_state: Optional[PyTree] = None,
 ) -> PyTree:
     """Apply one MOSGU communication round to a sharded parameter pytree.
 
     `param_specs` is the PartitionSpec tree the params carry under `jit`;
     shard_map re-exposes the per-device views so ppermute runs over the node
     axes while "model"-sharded dimensions stay device-local.
+
+    ``codec`` (a :class:`repro.compress.Codec`) makes the collective permute
+    *encoded* buffers (int8 codes + scales, packed top-k pairs) instead of
+    raw tensors. ``ef_state`` — a pytree of f32 residuals mirroring
+    ``params`` — enables error feedback for sparsifying codecs
+    (dissemination mode only); the call then returns ``(out, new_ef_state)``.
     """
     if mode not in GOSSIP_BODIES:
         raise ValueError(f"unknown gossip mode {mode!r}; known: {sorted(GOSSIP_BODIES)}")
-    if mode == "tree_allreduce" and wire_dtype is not None:
-        body = partial(_tree_allreduce_body, plan, wire_dtype=wire_dtype)
+    if codec is not None and getattr(codec, "name", "") == "fp32":
+        codec = None  # identity: the plain wire
+    if codec is not None and mode not in CODEC_MODES:
+        raise ValueError(
+            f"gossip mode {mode!r} does not support a payload codec; "
+            f"codec-capable modes: {CODEC_MODES}")
+    if ef_state is not None:
+        if codec is None:
+            raise ValueError("ef_state needs a (lossy) payload codec")
+        if mode != "dissemination":
+            raise ValueError("error feedback is supported for the "
+                             "dissemination mode only")
+
+        def ef_body(theta, ef):
+            mean, _, new_ef = _dissemination_body(plan, theta, codec=codec, ef=ef)
+            return mean, new_ef
+
+        fn = _shard_map(ef_body, mesh, (param_specs, param_specs),
+                        (param_specs, param_specs))
+        return fn(params, ef_state)
+    if mode == "tree_allreduce" and (wire_dtype is not None or codec is not None):
+        body = partial(_tree_allreduce_body, plan, wire_dtype=wire_dtype,
+                       codec=codec)
+    elif codec is not None and mode == "dissemination":
+        def body(theta):
+            return _dissemination_body(plan, theta, codec=codec)[0]
+    elif codec is not None and mode in ("segmented", "flooding"):
+        body = partial(GOSSIP_BODIES[mode], plan, codec=codec)
     else:
         body = partial(GOSSIP_BODIES[mode], plan)
     fn = _shard_map(body, mesh, (param_specs,), param_specs)
     return fn(params)
 
 
-def gossip_collective_bytes(mode: str, plan: GossipPlan, param_bytes: int) -> float:
-    """Analytic bytes-on-wire per round (whole-network, one direction)."""
+def gossip_collective_bytes(mode: str, plan: GossipPlan, param_bytes: int,
+                            codec=None) -> float:
+    """Analytic bytes-on-wire per round (whole-network, one direction).
+
+    With a codec each transfer carries the codec's exact encoding of its
+    payload — the same :func:`repro.compress.per_send_wire_mb` formula the
+    host executors use, so cross-executor byte accounting agrees.
+    """
+    from ..compress import per_send_wire_mb  # numpy-only, no cycle
+
     if plan.n_nodes == 1:
         return 0.0
+
+    def total(transmissions: int, fraction: float = 1.0) -> float:
+        return transmissions * per_send_wire_mb(
+            codec, param_bytes / 1e6, fraction) * 1e6
+
     if mode == "dissemination":
-        return plan.dissemination.total_transmissions() * param_bytes
+        return total(plan.dissemination.total_transmissions())
     if mode == "segmented":
         if plan.segmented is None:
-            return plan.dissemination.total_transmissions() * param_bytes
-        # S× the transfers at 1/S the bytes each: same total as dissemination
-        return plan.segmented.bytes_on_wire(param_bytes)
+            return total(plan.dissemination.total_transmissions())
+        # S× the transfers at 1/S the bytes each (same raw total; the codec's
+        # per-chunk overhead applies per segment)
+        return total(plan.segmented.total_transmissions(),
+                     plan.segmented.payload_fraction)
     if mode == "tree_allreduce":
-        return plan.tree.total_transmissions() * param_bytes
+        return total(plan.tree.total_transmissions())
     if mode == "mixing":
-        return 2 * len(plan.mst.edges()) * param_bytes
+        return total(2 * len(plan.mst.edges()))
     if mode == "flooding":
         # all_gather: every node receives N-1 replicas
-        return plan.n_nodes * (plan.n_nodes - 1) * param_bytes
+        return total(plan.n_nodes * (plan.n_nodes - 1))
     if mode == "allreduce_ref":
         # ring all-reduce: 2(N-1)/N per node
-        return 2 * (plan.n_nodes - 1) * param_bytes
+        return total(2 * (plan.n_nodes - 1))
     raise ValueError(mode)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compress import make_codec
 from ..configs.base import ArchConfig
 from ..models.model import Batch, Model
 from ..optim.optimizers import Optimizer, clip_by_global_norm, global_norm, make_optimizer
@@ -45,6 +46,11 @@ class DFLConfig:
     gossip_interval: int = 1  # local steps between gossip rounds
     max_grad_norm: float = 1.0
     wire_dtype: str = ""  # "" = native; "bfloat16" compresses gossip payloads
+    # payload codec for the gossip wire (repro.compress: "bf16", "int8",
+    # "int4", "topk"; "" = raw). Sparsifying codecs carry an error-feedback
+    # residual in opt_state["codec_ef"] so dropped coordinates are
+    # compensated across rounds (dissemination mode).
+    codec: str = ""
     lr: float = 3e-4
     warmup: int = 100
     total_steps: int = 10_000
@@ -66,6 +72,7 @@ class DFLTrainer:
             self.cfg, self.dfl.lr, self.dfl.warmup, self.dfl.total_steps
         )
         self.plan = GossipPlan.build(mesh, self.cfg.node_axes)
+        self.codec = make_codec(self.dfl.codec) if self.dfl.codec else None
 
     # -- sharding ----------------------------------------------------------
     def state_specs(self, state_shapes: TrainState) -> TrainState:
@@ -93,9 +100,18 @@ class DFLTrainer:
     def init_state(self, key: jax.Array) -> TrainState:
         def make(key):
             params = self.model.init(key)
+            opt_state = self.opt.init(params)
+            if (self.codec is not None and self.codec.error_feedback
+                    and self.dfl.gossip_mode == "dissemination"):
+                # per-node error-feedback residual: lives with the optimizer
+                # state so it shards/donates/persists like the moments. Only
+                # the dissemination collective supports EF; other codec modes
+                # run the sparsifier without feedback.
+                opt_state = dict(opt_state, codec_ef=jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params))
             return TrainState(
                 params=params,
-                opt_state=self.opt.init(params),
+                opt_state=opt_state,
                 step=jnp.zeros((), jnp.int32),
             )
 
@@ -106,7 +122,7 @@ class DFLTrainer:
     # -- the step ------------------------------------------------------------
     def train_step_fn(self) -> Callable[[TrainState, Batch], Tuple[TrainState, Dict]]:
         model, opt, dfl, plan, mesh = self.model, self.opt, self.dfl, self.plan, self.mesh
-        cfg = self.cfg
+        cfg, codec = self.cfg, self.codec
 
         def step_fn(state: TrainState, batch: Batch, param_specs: PyTree):
             mb = max(int(cfg.microbatches), 1)
@@ -137,24 +153,32 @@ class DFLTrainer:
                 loss, grads = jax.value_and_grad(model.train_loss)(state.params, batch)
             grads, gnorm = clip_by_global_norm(grads, dfl.max_grad_norm)
             params, opt_state = opt.update(state.params, grads, state.opt_state, state.step)
+            if "codec_ef" in state.opt_state and "codec_ef" not in opt_state:
+                # optimizers rebuild their state dict; carry the residual over
+                opt_state = dict(opt_state, codec_ef=state.opt_state["codec_ef"])
 
             # MOSGU gossip round (every step when interval == 1; the common
             # dry-run/deployment configuration — interval > 1 wraps in cond)
             wire = jnp.bfloat16 if dfl.wire_dtype == "bfloat16" else None
 
+            def exchange(theta, ef):
+                if ef is not None:
+                    return gossip_exchange(dfl.gossip_mode, plan, mesh, theta,
+                                           param_specs, codec=codec, ef_state=ef)
+                return gossip_exchange(dfl.gossip_mode, plan, mesh, theta,
+                                       param_specs, wire_dtype=wire,
+                                       codec=codec), None
+
             def do_gossip(params, opt_state):
+                ef = opt_state.get("codec_ef")
                 if "master" in opt_state:
-                    master = gossip_exchange(
-                        dfl.gossip_mode, plan, mesh, opt_state["master"],
-                        param_specs, wire_dtype=wire,
-                    )
+                    master, new_ef = exchange(opt_state["master"], ef)
                     opt_state = dict(opt_state, master=master)
                     params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
                 else:
-                    params = gossip_exchange(
-                        dfl.gossip_mode, plan, mesh, params, param_specs,
-                        wire_dtype=wire,
-                    )
+                    params, new_ef = exchange(params, ef)
+                if new_ef is not None:
+                    opt_state = dict(opt_state, codec_ef=new_ef)
                 return params, opt_state
 
             if dfl.gossip_interval <= 1:

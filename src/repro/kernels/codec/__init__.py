@@ -1,0 +1,7 @@
+"""Payload-codec kernels: quantize/dequantize and top-k select+pack.
+
+Layout mirrors ``kernels/attention|mixing|scan``: the Pallas kernels live in
+``quant_pack.py`` / ``topk_pack.py``, pure-jnp oracles in ``ref.py``, and the
+jitted dispatch wrappers (interpret mode off-TPU, so CI runs them on CPU) in
+``ops.py``.
+"""

@@ -1,0 +1,81 @@
+"""Jitted public wrappers around the codec kernels (interpret off-TPU).
+
+These are the entry points :mod:`repro.compress` dispatches to from the
+JAX side of each codec: flatten/pad/reshape into the wire's chunked layout,
+run the Pallas kernel, and (for int4) pack two codes per byte so the array
+that crosses ``ppermute`` really is the wire-sized buffer.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quant_pack import dequantize_chunks, quantize_chunks
+from .topk_pack import topk_select_blocks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _chunked(x: jax.Array, chunk: int) -> jax.Array:
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % chunk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, chunk)
+
+
+@partial(jax.jit, static_argnames=("bits", "chunk", "block_c"))
+def quantize_op(x, *, bits=8, chunk=1024, block_c=8):
+    """Quantize an arbitrary-shape array into wire buffers.
+
+    Returns ``(codes, scales)``: codes are int8 ``(C, chunk)`` for 8-bit, or
+    nibble-packed uint8 ``(C, chunk // 2)`` for 4-bit; scales are f32 ``(C,)``.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    codes, scales = quantize_chunks(_chunked(x, chunk), qmax=float(qmax),
+                                    block_c=block_c, interpret=not _on_tpu())
+    if bits == 4:
+        u = codes.astype(jnp.uint8)
+        codes = (u[:, 0::2] & 0xF) | ((u[:, 1::2] & 0xF) << 4)
+    return codes, scales
+
+
+@partial(jax.jit, static_argnames=("size", "bits", "chunk", "block_c"))
+def dequantize_op(codes, scales, *, size, bits=8, chunk=1024, block_c=8):
+    """Inverse of :func:`quantize_op`; returns flat f32 of length ``size``."""
+    if bits == 4:
+        lo = (codes & 0xF).astype(jnp.int8)
+        hi = ((codes >> 4) & 0xF).astype(jnp.int8)
+        lo, hi = (jnp.where(v >= 8, v - 16, v) for v in (lo, hi))
+        codes = jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], chunk)
+    out = dequantize_chunks(codes, scales, block_c=block_c,
+                            interpret=not _on_tpu())
+    return out.reshape(-1)[:size]
+
+
+@partial(jax.jit, static_argnames=("k", "block", "block_c"))
+def topk_select_op(x, *, k, block=256, block_c=8):
+    """Block-local top-k of an arbitrary-shape array: (values, indices).
+
+    On TPU this is the Pallas select+pack kernel; off-TPU it dispatches to
+    the jnp oracle (identical selection semantics, pinned by tests) because
+    interpret mode unrolls the k-deep select loop into a pathologically
+    large XLA graph when embedded in the compiled gossip collectives.
+    """
+    xb = _chunked(x, block)
+    if _on_tpu():
+        return topk_select_blocks(xb, k=k, block_c=block_c)
+    from .ref import topk_select_ref
+
+    return topk_select_ref(xb, k)
+
+
+@partial(jax.jit, static_argnames=("size", "block"))
+def topk_scatter(vals, idx, *, size, block):
+    """Decode packed (values, indices) back to a flat dense f32 array."""
+    c = vals.shape[0]
+    dense = jnp.zeros((c, block), jnp.float32)
+    dense = dense.at[jnp.arange(c)[:, None], idx].set(vals.astype(jnp.float32))
+    return dense.reshape(-1)[:size]

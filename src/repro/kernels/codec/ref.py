@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the payload-codec kernels.
+
+All three refs operate on the chunked/blocked layout the wire format
+defines: ``x`` is ``(C, chunk)`` rows of consecutive flat elements (the
+``ops`` wrappers do the flatten/pad/reshape).
+"""
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_ref(x, qmax):
+    """Per-row symmetric absmax quantization: (codes int8, scales f32)."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(codes, scales):
+    return codes.astype(jnp.float32) * scales[:, None].astype(jnp.float32)
+
+
+def topk_select_ref(x, k):
+    """Per-row top-k by |value| (ties to the lower index): (values, idx)."""
+    xf = x.astype(jnp.float32)
+    _, idx = lax.top_k(jnp.abs(xf), k)
+    idx = jnp.sort(idx, axis=1).astype(jnp.int32)  # selection is a set
+    return jnp.take_along_axis(xf, idx, axis=1), idx

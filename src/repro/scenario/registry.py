@@ -78,6 +78,38 @@ def _paper_flooding() -> ScenarioSpec:
 # ---------------------------------------------------------------------------
 
 
+@register("quantized_table3")
+def _quantized_table3() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="quantized_table3",
+        overlay=TopologySpec(kind="erdos_renyi", n=10, seed=3),
+        protocol="mosgu",
+        payload="b0",
+        codec="int8",
+        rounds=1,
+        description=(
+            "paper_table3 under int8 wire quantization (per-chunk absmax "
+            "scales): ~4x fewer bytes per transfer, so the Tables III-V "
+            "metrics re-derive under compression — same schedule, same "
+            "transmissions, a fraction of the round time."))
+
+
+@register("topk_sweep")
+def _topk_sweep() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="topk_sweep",
+        overlay=TopologySpec(kind="watts_strogatz", n=10, seed=4),
+        protocol="dissemination",
+        payload="v2",  # MobileNetV2, 14 MB
+        codec="topk",
+        rounds=3,
+        description=(
+            "Top-k sparsified gossip (~10x compression at the default 5% "
+            "density): the queue engine carries per-node error-feedback "
+            "residuals across all three rounds, so coordinates dropped in "
+            "one round are compensated in the next (DGC/EF-SGD)."))
+
+
 @register("churn_storm")
 def _churn_storm() -> ScenarioSpec:
     return ScenarioSpec(

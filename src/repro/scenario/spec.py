@@ -37,6 +37,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..compress import CODEC_NAMES, Codec, make_codec
 from ..core.graph import Graph, TopologySpec, make_topology
 from ..core.netsim import SimResult, TestbedSpec
 
@@ -135,6 +136,11 @@ class ScenarioSpec:
     protocol: str = "dissemination"
     n_segments: int = 4
     payload: Union[float, str] = 21.2  # MB | paper payload code | arch name
+    # Payload codec (repro.compress wire formats: fp32 | bf16 | int8 | int4 |
+    # topk): how many bytes each send actually costs. All executors account
+    # bytes through the same codec; the engine/jax executors also move the
+    # encoded payloads.
+    codec: str = "fp32"
     rounds: int = 1
     churn: Tuple[ChurnEvent, ...] = ()
     underlay: Optional[TestbedSpec] = None  # None = derived from the overlay
@@ -172,6 +178,12 @@ class ScenarioSpec:
     def payload_mb(self) -> float:
         return resolve_payload_mb(self.payload)
 
+    def codec_obj(self) -> Optional[Codec]:
+        """The declared wire codec; ``None`` for the raw-fp32 baseline (so
+        legacy byte/time accounting stays bit-identical)."""
+        c = make_codec(self.codec)
+        return None if c.name == "fp32" else c
+
     def replace(self, **changes) -> "ScenarioSpec":
         return dataclasses.replace(self, **changes)
 
@@ -186,6 +198,11 @@ class ScenarioSpec:
             raise ValueError("n_segments must be >= 1")
         if not (0.0 <= self.drop_rate < 1.0):
             raise ValueError("drop_rate must be in [0, 1)")
+        try:
+            make_codec(self.codec)
+        except ValueError:
+            raise ValueError(
+                f"unknown codec {self.codec!r}; known: {CODEC_NAMES}") from None
         n = self.n
         for ev in self.churn:
             if ev.action not in CHURN_ACTIONS:
@@ -213,6 +230,7 @@ class ScenarioSpec:
             "n_segments": self.n_segments,
             "payload": self.payload,
             "payload_mb": self.payload_mb(),
+            "codec": self.codec,
             "rounds": self.rounds,
             "churn": [ev.to_dict() for ev in self.churn],
             "drop_rate": self.drop_rate,
@@ -233,7 +251,10 @@ class RoundReport:
     moderator: int
     n_slots: int
     transmissions: int  # attempted transfers (retransmissions included)
-    bytes_mb: float  # bytes on the wire, MB (payload_fraction applied)
+    bytes_mb: float  # raw payload bytes moved, MB (payload_fraction applied)
+    # what actually crossed links after the wire codec, MB (== bytes_mb for
+    # the fp32 baseline) — compression savings as a first-class metric
+    bytes_on_wire_mb: float = 0.0
     drops: int = 0
     churn_applied: List[Dict[str, Any]] = field(default_factory=list)
     # netsim-only timing (None on counting/queue/jax executors)
@@ -272,6 +293,10 @@ class ScenarioResult:
         return sum(r.bytes_mb for r in self.rounds)
 
     @property
+    def total_bytes_on_wire_mb(self) -> float:
+        return sum(r.bytes_on_wire_mb for r in self.rounds)
+
+    @property
     def total_slots(self) -> int:
         return sum(r.n_slots for r in self.rounds)
 
@@ -294,6 +319,7 @@ class ScenarioResult:
                 "rounds": len(self.rounds),
                 "transmissions": self.total_transmissions,
                 "bytes_mb": round(self.total_bytes_mb, 6),
+                "bytes_on_wire_mb": round(self.total_bytes_on_wire_mb, 6),
                 "slots": self.total_slots,
                 "drops": self.total_drops,
                 "time_s": (None if self.total_time_s is None
