@@ -13,10 +13,13 @@ Standalone usage (CI perf trajectory):
 writes ``BENCH_netsim.json`` with slots / total-time / transmissions per
 protocol on the paper's 10-node testbed, (with ``--scenarios``)
 ``BENCH_scenarios.json`` — one registry scenario per executor through the
-declarative scenario API (:mod:`repro.scenario`) — and (with ``--codec``)
+declarative scenario API (:mod:`repro.scenario`) — (with ``--codec``)
 ``BENCH_codec.json``: compression ratio / bandwidth / total round time per
-payload codec vs the fp32 baseline on the paper_table3 cell.
-``--list`` prints the scenario registry and exits.
+payload codec vs the fp32 baseline on the paper_table3 cell — and (with
+``--sweep``) ``BENCH_sweep.json``: the ``table3_full`` named sweep through
+:func:`repro.scenario.run_sweep` plus the sweep-vs-serial speedup of the
+batched counting path on a 32-cell grid (acceptance floor: >= 5x).
+``--list`` prints the scenario and sweep registries and exits.
 """
 from __future__ import annotations
 
@@ -33,7 +36,13 @@ from repro.core.schedule import (
     compile_segmented,
     compile_tree_allreduce,
 )
-from repro.scenario import ScenarioSpec, run_scenario, scenarios
+from repro.scenario import (
+    ScenarioSpec,
+    SweepSpec,
+    run_scenario,
+    run_sweep,
+    scenarios,
+)
 
 BENCH_PROTOCOLS = ("flooding", "mosgu", "segmented", "tree_allreduce")
 
@@ -105,20 +114,23 @@ def netsim_bench(n: int = 10, model_mb: float = 21.2, seed: int = 3,
                  topology: str = "erdos_renyi", n_segments: int = 4) -> dict:
     """Per-protocol slots / total round time / transmissions on the testbed.
 
-    Every row is one single-round :class:`ScenarioSpec` executed on the
-    netsim executor — the declarative front door; the underlay is derived
-    from the overlay's subnet/cost model. All values are deterministic given
-    (topology, n, seed, model_mb) and unchanged from the pre-scenario-API
-    driver (cross-checked in tests).
+    The whole table is one single-axis :class:`SweepSpec` (protocol axis)
+    executed on the netsim executor through :func:`run_sweep` — the sweep
+    front door; the underlay is derived from the overlay's subnet/cost
+    model. All values are deterministic given (topology, n, seed, model_mb)
+    and unchanged from the pre-sweep-API driver (cross-checked in tests).
     """
     overlay = TopologySpec(kind=topology, n=n, seed=seed)
+    sweep = SweepSpec(
+        name="bench",
+        base=ScenarioSpec(name="bench", overlay=overlay, payload=model_mb,
+                          n_segments=n_segments, rounds=1),
+        grid={"protocol": BENCH_PROTOCOLS})
+    result = run_sweep(sweep, executor="netsim")
     out = {}
-    for name in BENCH_PROTOCOLS:
-        spec = ScenarioSpec(name=f"bench/{name}", overlay=overlay,
-                            protocol=name, payload=model_mb,
-                            n_segments=n_segments, rounds=1)
-        res = run_scenario(spec, executor="netsim")
-        row = res.rounds[0]
+    for cell in result.cells:
+        name = cell.coords["protocol"]
+        row = cell.result.rounds[0]
         out[name] = {
             "slots": row.n_slots,
             "transmissions": row.transmissions,
@@ -189,6 +201,59 @@ def codec_bench(scenario: str = "paper_table3") -> dict:
             "codecs": rows}
 
 
+def sweep_bench(speedup_floor: float = 5.0) -> dict:
+    """The sweep API's perf trajectory, in two parts.
+
+    1. ``table3_full`` (the paper's Tables III-V grid, 32 cells) on the
+       plan executor through one :func:`run_sweep` call — the reduced-size
+       CI smoke of the named-sweep front door, with cache-hit accounting.
+    2. Sweep-vs-serial speedup of the batched counting path on a 32-cell
+       payload x codec grid over one N=200 topology (one plan compile
+       instead of 32): ``run_sweep`` must be >= ``speedup_floor`` x faster
+       than the equivalent serial ``run_scenario`` loop, and every cell
+       must equal its serial result exactly.
+    """
+    table3 = run_sweep(scenarios.get_sweep("table3_full"), executor="plan")
+
+    grid = SweepSpec(
+        name="speedup_grid",
+        base=ScenarioSpec(
+            overlay=TopologySpec(kind="watts_strogatz", n=200, seed=1),
+            protocol="dissemination", rounds=1),
+        grid={"payload": ("v3s", "v2", "b0", "v3l", "b1", "b2", "b3", 50.0),
+              "codec": ("fp32", "bf16", "int8", "int4")})
+    cells = grid.cells()
+    t0 = time.perf_counter()
+    serial = [run_scenario(c.spec, executor="plan") for c in cells]
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    swept = run_sweep(grid, executor="plan")
+    t_sweep = time.perf_counter() - t0
+    mismatches = [c.index for s, c in zip(serial, swept.cells)
+                  if s.to_dict() != c.result.to_dict()]
+    if mismatches:
+        raise SystemExit(f"sweep cells diverge from serial: {mismatches}")
+    speedup = t_serial / t_sweep
+    if speedup < speedup_floor:
+        raise SystemExit(
+            f"batched sweep speedup {speedup:.1f}x below the "
+            f"{speedup_floor}x acceptance floor "
+            f"(serial {t_serial:.3f}s, sweep {t_sweep:.3f}s)")
+    return {
+        "speedup_grid": {
+            "n_cells": len(cells),
+            "overlay": "watts_strogatz/n200",
+            "serial_s": round(t_serial, 4),
+            "sweep_s": round(t_sweep, 4),
+            "speedup_x": round(speedup, 2),
+            "floor_x": speedup_floor,
+            "cells_equal_serial": True,
+            "cache": swept.cache_stats,
+        },
+        "table3_full": table3.to_dict(),
+    }
+
+
 def list_scenarios() -> None:
     width = max(len(n) for n in scenarios.names())
     for name in scenarios.names():
@@ -197,6 +262,13 @@ def list_scenarios() -> None:
               f"codec={spec.codec:5s} rounds={spec.rounds:2d} "
               f"executors={','.join(spec.executors)}")
         print(f"{'':{width}s}  {spec.description}")
+    print("\nnamed sweeps:")
+    for name in scenarios.sweep_names():
+        sweep = scenarios.get_sweep(name)
+        axes = ",".join(f"{k}({len(tuple(v))})"
+                        for k, v in sweep.axes().items())
+        print(f"{name:{width}s}  cells={sweep.n_cells:3d} axes={axes}")
+        print(f"{'':{width}s}  {sweep.description}")
 
 
 def main(argv) -> int:
@@ -206,6 +278,7 @@ def main(argv) -> int:
     smoke = "--smoke" in argv
     with_scenarios = "--scenarios" in argv
     with_codec = "--codec" in argv
+    with_sweep = "--sweep" in argv
     if with_scenarios:
         # the jax-executor scenario needs a multi-device (CPU) mesh; must be
         # set before jax initializes, and must compose with any XLA_FLAGS
@@ -238,6 +311,20 @@ def main(argv) -> int:
                   f"wire={row['bytes_on_wire_mb']:8.1f}MB "
                   f"round={row['total_time_s']:7.2f}s "
                   f"speedup={row['speedup_vs_fp32']:.2f}x")
+    if with_sweep:
+        sb = sweep_bench()
+        with open("BENCH_sweep.json", "w") as f:
+            json.dump(sb, f, indent=2)
+        sg = sb["speedup_grid"]
+        print(f"wrote BENCH_sweep.json (table3_full: "
+              f"{sb['table3_full']['n_cells']} cells on the plan executor)")
+        print(f"  batched sweep vs serial loop on {sg['n_cells']} cells "
+              f"({sg['overlay']}): {sg['serial_s']}s -> {sg['sweep_s']}s "
+              f"= {sg['speedup_x']}x (floor {sg['floor_x']}x)")
+        cache = sg["cache"]
+        print(f"  plan cache: {cache['unique_policies']} unique policies for "
+              f"{sg['n_cells']} cells "
+              f"({cache['policy_hits']} hits / {cache['policy_misses']} misses)")
     if not smoke:
         csv_rows = []
         run(csv_rows)

@@ -90,6 +90,24 @@ def main():
           [len(r.members) for r in cs.rounds],
           "| moderators:", [r.moderator for r in cs.rounds])
 
+    # the sweep front door: a whole experiment grid is one call — here the
+    # paper's Tables III-V grid (topology x payload x protocol, 32 cells) on
+    # the batched counting executor, with one MST/coloring per topology
+    from repro.scenario import run_sweep
+
+    print(f"\nsweep registry: {scenarios.sweep_names()}")
+    t0 = time.monotonic()
+    table3 = run_sweep(scenarios.get_sweep("table3_full"), executor="plan")
+    dt = time.monotonic() - t0
+    cache = table3.cache_stats
+    print(f"table3_full: {len(table3.cells)} cells in {dt:.2f}s "
+          f"({cache['unique_policies']} unique plans, "
+          f"{cache['policy_hits']} cache hits)")
+    for proto, m in table3.marginals()["protocol"].items():
+        print(f"  {proto:20s} mean-tx={m['mean_transmissions']:6.1f} "
+              f"mean-wire={m['mean_bytes_on_wire_mb']:8.1f}MB "
+              f"over {m['cells']} cells")
+
 
 if __name__ == "__main__":
     main()

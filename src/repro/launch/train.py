@@ -15,6 +15,16 @@ recompile on every membership change, moderator rotation every round):
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
       --mesh 1x4x2 --scenario churn_storm
+
+With ``--sweep NAME`` the run is one cell of a registered experiment grid
+(:mod:`repro.scenario.sweep`) — the launcher-array pattern: ``--cell K``
+trains the K-th expanded cell's scenario (one cell per process / SLURM
+array index), while ``--sweep NAME`` alone prints the expanded grid with
+its plan-executor accounting (a dry-run of the whole table) and exits:
+
+  PYTHONPATH=src python -m repro.launch.train --sweep codec_x_protocol
+  PYTHONPATH=src python -m repro.launch.train --smoke --mesh 1x4x2 \
+      --sweep codec_x_protocol --cell 3
 """
 from __future__ import annotations
 
@@ -36,12 +46,50 @@ def main() -> None:
     ap.add_argument("--scenario", default="",
                     help="registry scenario driving protocol/rounds/churn "
                          "(see repro.scenario.scenarios.names())")
+    ap.add_argument("--sweep", default="",
+                    help="registered sweep grid; with --cell K trains that "
+                         "cell's scenario, alone prints the expanded grid "
+                         "(see repro.scenario.scenarios.sweep_names())")
+    ap.add_argument("--cell", type=int, default=-1,
+                    help="cell index into --sweep (the launcher-array slot)")
     ap.add_argument("--gossip-interval", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    if args.sweep and args.scenario:
+        raise SystemExit("--sweep and --scenario are mutually exclusive: "
+                         "a sweep cell *is* the scenario for the run")
+    if args.cell >= 0 and not args.sweep:
+        raise SystemExit("--cell is an index into --sweep; pass a sweep name "
+                         "(see repro.scenario.scenarios.sweep_names())")
+    sweep_cell = None
+    if args.sweep:
+        # resolved before jax comes up: the dry-run path never needs devices
+        from ..scenario import run_sweep, scenarios
+
+        sweep = scenarios.get_sweep(args.sweep)
+        cells = sweep.cells()
+        if args.cell < 0:
+            result = run_sweep(sweep, executor="plan")
+            print(f"sweep {sweep.name!r}: {len(cells)} cells "
+                  f"(pass --cell K to train one)")
+            for row in result.table():
+                coords = ",".join(f"{k}={v}" for k, v in row.items()
+                                  if k in sweep.axes())
+                print(f"  [{row['cell']:3d}] {coords:40s} "
+                      f"tx={row['transmissions']:6d} "
+                      f"wire={row['bytes_on_wire_mb']:10.1f}MB")
+            return
+        if not (0 <= args.cell < len(cells)):
+            raise SystemExit(
+                f"--cell {args.cell} outside [0, {len(cells)}) for sweep "
+                f"{sweep.name!r}")
+        sweep_cell = cells[args.cell]
+        print(f"sweep {sweep.name!r} cell {args.cell}: "
+              f"{sweep_cell.spec.name}")
 
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
@@ -60,7 +108,16 @@ def main() -> None:
     from ..models import Batch, build_model
 
     scenario = None
-    if args.scenario:
+    codec = ""
+    if sweep_cell is not None:
+        from ..scenario import resolve_gossip_mode
+
+        scenario = sweep_cell.spec
+        args.gossip = resolve_gossip_mode(scenario.protocol)
+        args.steps = scenario.rounds
+        print(f"cell scenario: protocol={scenario.protocol} "
+              f"codec={scenario.codec} rounds={scenario.rounds}")
+    elif args.scenario:
         from ..scenario import resolve_gossip_mode, scenarios
 
         scenario = scenarios.get(args.scenario)
@@ -68,6 +125,10 @@ def main() -> None:
         args.steps = scenario.rounds
         print(f"scenario {scenario.name!r}: protocol={scenario.protocol} "
               f"rounds={scenario.rounds} churn={len(scenario.churn)} events")
+    if scenario is not None:
+        # the scenario's wire codec drives the trainer ("" = raw fp32, the
+        # DFLConfig default — same resolution as examples/train_dfl.py)
+        codec = scenario.codec if scenario.codec != "fp32" else ""
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -83,7 +144,7 @@ def main() -> None:
 
     model = build_model(cfg)
     dfl = DFLConfig(gossip_mode=args.gossip, gossip_interval=args.gossip_interval,
-                    lr=args.lr, total_steps=args.steps)
+                    lr=args.lr, total_steps=args.steps, codec=codec)
     trainer = DFLTrainer(model, mesh, dfl)
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M nodes={trainer.plan.n_nodes} "
           f"mst_slots={trainer.plan.dissemination.n_slots} gossip={args.gossip}")

@@ -6,12 +6,24 @@
     result = run_scenario(spec, executor="netsim")
     print(result.to_json())
 
+Whole experiment grids are one call through the sweep API:
+
+    from repro.scenario import SweepSpec, run_sweep, scenarios
+
+    table = run_sweep(scenarios.get_sweep("table3_full"), executor="netsim")
+    print(table.to_json())          # flat cell table + per-axis marginals
+
 See :mod:`repro.scenario.spec` for what a scenario declares,
-:mod:`repro.scenario.runner` for the executor matrix, and
+:mod:`repro.scenario.executors` for the pluggable executor registry,
+:mod:`repro.scenario.sweep` for grid/zip sweep semantics,
+:mod:`repro.scenario.cache` for the cross-cell plan cache, and
 :mod:`repro.scenario.registry` for the named workloads.
 """
+from . import executors  # noqa: F401
 from . import registry as scenarios  # noqa: F401
-from .registry import register  # noqa: F401
+from .cache import PlanCache  # noqa: F401
+from .executors import Executor, RoundContext  # noqa: F401
+from .registry import register, register_sweep  # noqa: F401
 from .runner import (  # noqa: F401
     EXECUTORS,
     GOSSIP_MODES,
@@ -25,4 +37,11 @@ from .spec import (  # noqa: F401
     ScenarioResult,
     ScenarioSpec,
     resolve_payload_mb,
+)
+from .sweep import (  # noqa: F401
+    SweepCell,
+    SweepCellResult,
+    SweepResult,
+    SweepSpec,
+    run_sweep,
 )

@@ -1,0 +1,168 @@
+"""Cross-cell plan cache: MST + coloring + policy computed once per unique
+member subgraph, shared by every executor and by :func:`run_sweep`.
+
+A sweep is a grid of :class:`~repro.scenario.spec.ScenarioSpec` cells that
+mostly *share* their communication structure: a payload x codec grid over
+one topology has 32 cells but exactly one MST/coloring/policy, and even a
+topology x protocol grid only has as many unique plans as unique
+``(member set, overlay, protocol, n_segments)`` combinations. Before the
+sweep API every cell recomputed all of it.
+
+:class:`PlanCache` memoizes the four deterministic stages:
+
+=============  ==========================================================
+stage          key
+=============  ==========================================================
+overlay graph  overlay fingerprint (TopologySpec fields | matrix bytes)
+member         (overlay, member set) — the moderator-built dense subgraph
+subgraph
+policy         (overlay, members, protocol, n_segments, mst/coloring
+               algorithm, first color) — ``make_policy`` output
+measure        policy key — ``measure_policy`` slot/transmission counts
+=============  ==========================================================
+
+Cached :class:`~repro.core.plan.CommPolicy` objects are stateful but every
+consumer (``measure_policy``, ``simulate_policy``, ``GossipEngine``) resets
+them before use, so sequential sharing is safe; results are bit-identical
+to a cold build (pinned by ``tests/test_sweep.py``). Hit/miss counters per
+stage make cache effectiveness a first-class, testable metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.graph import Graph, TopologySpec
+from ..core.plan import CommPolicy, make_policy, measure_policy
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .spec import ScenarioSpec
+
+PolicyKey = Tuple[Any, ...]
+
+
+def overlay_fingerprint(spec: "ScenarioSpec") -> Tuple[Any, ...]:
+    """A hashable identity for a scenario's declared overlay.
+
+    A :class:`TopologySpec` is identified by its field values (generation is
+    deterministic given the spec); an explicit cost matrix by its exact
+    bytes, so two numerically identical matrices share cache entries.
+    """
+    ov = spec.overlay
+    if isinstance(ov, TopologySpec):
+        return ("topo",) + dataclasses.astuple(ov)
+    a = np.asarray(ov, dtype=np.float64)
+    return ("matrix", a.shape, a.tobytes())
+
+
+def policy_key(spec: "ScenarioSpec",
+               members: Tuple[int, ...]) -> PolicyKey:
+    """The cache identity of one membership epoch's communication plan."""
+    return (overlay_fingerprint(spec), members, spec.protocol,
+            spec.n_segments, spec.mst_algorithm, spec.coloring_algorithm)
+
+
+class PlanCache:
+    """Memoizes overlay -> subgraph -> policy -> counting stats.
+
+    One instance may span many :func:`run_scenario` calls (that is the point
+    — :func:`run_sweep` threads one cache through every cell); a fresh
+    instance per call reproduces the historical cold-build behaviour
+    exactly.
+    """
+
+    def __init__(self) -> None:
+        self._overlays: Dict[Tuple[Any, ...], Graph] = {}
+        self._subgraphs: Dict[Tuple[Any, ...], Graph] = {}
+        self._policies: Dict[PolicyKey, CommPolicy] = {}
+        self._measures: Dict[PolicyKey, Dict[str, float]] = {}
+        self._trajectories: Dict[Tuple[Any, ...], list] = {}
+        self.counters: Dict[str, int] = {
+            "overlay_hits": 0, "overlay_misses": 0,
+            "subgraph_hits": 0, "subgraph_misses": 0,
+            "policy_hits": 0, "policy_misses": 0,
+            "measure_hits": 0, "measure_misses": 0,
+            "trajectory_hits": 0, "trajectory_misses": 0,
+        }
+
+    # -- stages --------------------------------------------------------------
+    def overlay(self, spec: "ScenarioSpec") -> Graph:
+        key = overlay_fingerprint(spec)
+        g = self._overlays.get(key)
+        if g is None:
+            self.counters["overlay_misses"] += 1
+            g = self._overlays[key] = spec.overlay_graph()
+        else:
+            self.counters["overlay_hits"] += 1
+        return g
+
+    def subgraph(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+                 build) -> Graph:
+        """The moderator-built dense member subgraph; ``build()`` computes it
+        on a miss (it is a pure function of (overlay, member set): reports
+        are filed symmetrically from the overlay's cost matrix)."""
+        key = (overlay_fingerprint(spec), members)
+        g = self._subgraphs.get(key)
+        if g is None:
+            self.counters["subgraph_misses"] += 1
+            g = self._subgraphs[key] = build()
+        else:
+            self.counters["subgraph_hits"] += 1
+        return g
+
+    def policy(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+               build_subgraph) -> CommPolicy:
+        """``make_policy`` over the member subgraph, computed once per key."""
+        key = policy_key(spec, members)
+        pol = self._policies.get(key)
+        if pol is None:
+            self.counters["policy_misses"] += 1
+            g_sub = self.subgraph(spec, members, build_subgraph)
+            pol = self._policies[key] = make_policy(
+                spec.protocol, g_sub,
+                mst_algorithm=spec.mst_algorithm,
+                coloring_algorithm=spec.coloring_algorithm,
+                n_segments=spec.n_segments)
+        else:
+            self.counters["policy_hits"] += 1
+        return pol
+
+    def measure(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+                pol: Optional[CommPolicy] = None) -> Dict[str, float]:
+        """Cached ``measure_policy`` counts for one epoch's policy."""
+        key = policy_key(spec, members)
+        stats = self._measures.get(key)
+        if stats is None:
+            self.counters["measure_misses"] += 1
+            if pol is None:
+                raise ValueError("measure miss needs the policy to count")
+            stats = self._measures[key] = measure_policy(pol)
+        else:
+            self.counters["measure_hits"] += 1
+        return stats
+
+    def trajectory(self, spec: "ScenarioSpec", build) -> list:
+        """Cached membership trajectory: ``(round, moderator, members,
+        applied_churn)`` per round. Depends only on (overlay, rounds, churn)
+        — not on protocol or payload — so a payload x codec grid replays the
+        moderator lifecycle once. ``build()`` must also file each epoch's
+        member subgraph via :meth:`subgraph` so hits never need a moderator.
+        """
+        key = (overlay_fingerprint(spec), spec.rounds, spec.churn)
+        traj = self._trajectories.get(key)
+        if traj is None:
+            self.counters["trajectory_misses"] += 1
+            traj = self._trajectories[key] = build()
+        else:
+            self.counters["trajectory_hits"] += 1
+        return traj
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        out = dict(self.counters)
+        out["unique_overlays"] = len(self._overlays)
+        out["unique_subgraphs"] = len(self._subgraphs)
+        out["unique_policies"] = len(self._policies)
+        return out

@@ -1,10 +1,13 @@
-"""Named-scenario registry: the paper's tables and beyond-paper workloads
-as first-class, runnable objects.
+"""Named-scenario and named-sweep registry: the paper's tables and
+beyond-paper workloads as first-class, runnable objects.
 
 ``scenarios.get("paper_table3")`` returns a fresh :class:`ScenarioSpec`;
-``run_scenario(spec, executor=...)`` executes it anywhere. Register new
-workloads with :func:`register` — a scenario is a registry entry, not a new
-script.
+``run_scenario(spec, executor=...)`` executes it anywhere. Whole experiment
+grids are registered the same way: ``scenarios.get_sweep("table3_full")``
+returns a :class:`~repro.scenario.sweep.SweepSpec` that
+``run_sweep(sweep, executor=...)`` expands and executes in one call.
+Register new workloads with :func:`register` / :func:`register_sweep` — an
+experiment is a registry entry, not a new script.
 """
 from __future__ import annotations
 
@@ -12,8 +15,10 @@ from typing import Callable, Dict, List
 
 from ..core.graph import TopologySpec
 from .spec import ChurnEvent, ScenarioSpec
+from .sweep import SweepSpec
 
 _REGISTRY: Dict[str, Callable[[], ScenarioSpec]] = {}
+_SWEEPS: Dict[str, Callable[[], SweepSpec]] = {}
 
 
 def register(name: str) -> Callable:
@@ -38,6 +43,30 @@ def get(name: str) -> ScenarioSpec:
 
 def names() -> List[str]:
     return sorted(_REGISTRY)
+
+
+def register_sweep(name: str) -> Callable:
+    """Decorator: register a zero-arg SweepSpec factory under ``name``."""
+
+    def deco(fn: Callable[[], SweepSpec]) -> Callable[[], SweepSpec]:
+        _SWEEPS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_sweep(name: str) -> SweepSpec:
+    """A fresh (mutable-safe) spec for a registered sweep."""
+    try:
+        factory = _SWEEPS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sweep {name!r}; known: {sweep_names()}") from None
+    return factory().validate()
+
+
+def sweep_names() -> List[str]:
+    return sorted(_SWEEPS)
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +207,63 @@ def _scale_1000() -> ScenarioSpec:
         description=(
             "Sweep scale: the same one-policy definition at N=1000 on the "
             "vectorized counting path and the runtime queue engine."))
+
+
+# ---------------------------------------------------------------------------
+# Named sweeps: whole paper tables (and beyond-paper grids) in one call
+# ---------------------------------------------------------------------------
+
+
+@register_sweep("table3_full")
+def _table3_full() -> SweepSpec:
+    return SweepSpec(
+        name="table3_full",
+        base=ScenarioSpec(
+            overlay=TopologySpec(kind="erdos_renyi", n=10, seed=3),
+            payload="b0", rounds=1),
+        grid={
+            "topology": ("complete", "erdos_renyi", "watts_strogatz",
+                         "barabasi_albert"),
+            "payload": ("v3s", "v2", "b0", "v3l"),
+            "protocol": ("broadcast_exchange", "mosgu_exchange"),
+        },
+        description=(
+            "The paper's Tables III-V grid in one call: topology family x "
+            "payload size x {broadcast, MOSGU} per-round exchange — 32 "
+            "cells, one MST/coloring per topology thanks to the shared plan "
+            "cache. Run on netsim for the timing columns, plan for counts."))
+
+
+@register_sweep("payload_latency_curve")
+def _payload_latency_curve() -> SweepSpec:
+    return SweepSpec(
+        name="payload_latency_curve",
+        base=ScenarioSpec(
+            overlay=TopologySpec(kind="erdos_renyi", n=10, seed=3),
+            protocol="mosgu", rounds=1),
+        grid={"payload": ("v3s", "v2", "b0", "v3l", "b1", "b2", "b3")},
+        description=(
+            "The paper's transfer-time-vs-model-size figure: full MOSGU "
+            "dissemination of every Table II payload over the same overlay "
+            "— the schedule is computed once and reused for all 7 cells."))
+
+
+@register_sweep("codec_x_protocol")
+def _codec_x_protocol() -> SweepSpec:
+    return SweepSpec(
+        name="codec_x_protocol",
+        base=ScenarioSpec(
+            overlay=TopologySpec(kind="erdos_renyi", n=10, seed=3),
+            payload="b0", rounds=1),
+        grid={
+            "codec": ("fp32", "bf16", "int8", "int4", "topk"),
+            "protocol": ("dissemination", "segmented"),
+        },
+        description=(
+            "Beyond-paper: wire codec x gossip protocol on the paper cell — "
+            "how compression interacts with segmentation (per-chunk scale "
+            "overhead is paid per segment). Byte accounting is exact on "
+            "every executor."))
 
 
 @register("mesh_smoke")

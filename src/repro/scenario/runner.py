@@ -1,8 +1,9 @@
-"""Scenario execution: one declared spec, any executor, one report shape.
+"""Scenario execution front door: one declared spec, any registered executor.
 
-``run_scenario(spec, executor=...)`` drives the full moderator lifecycle of
-the paper (connectivity reports -> MST + coloring -> gossip -> rotation,
-Section III-A) around the chosen executor:
+``run_scenario(spec, executor=...)`` looks the executor up in the registry
+(:mod:`repro.scenario.executors`) and hands it the spec; the moderator
+lifecycle of the paper (connectivity reports -> MST + coloring -> gossip ->
+rotation, Section III-A) lives once, in :meth:`Executor.execute`. Built-ins:
 
 =========  ================================================================
 executor   what runs each round
@@ -28,352 +29,46 @@ the emergency fallback when the current moderator itself leaves.
 Link failures (``spec.drop_rate``) are a runtime-queue behaviour: the engine
 executor retransmits (paper III-D) and counts drops; the static executors
 run failure-free.
+
+Grids of scenarios go through :func:`repro.scenario.sweep.run_sweep`, which
+shares MST/coloring/policy work across cells through one
+:class:`~repro.scenario.cache.PlanCache`; ``compare_protocols`` below is a
+thin wrapper over it.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Union
 
-import numpy as np
-
-from ..compress import per_send_wire_mb
-from ..core.gossip import GossipEngine
-from ..core.graph import Graph, TopologySpec
-from ..core.moderator import ConnectivityReport, Moderator
-from ..core.netsim import SimResult, TestbedSpec, simulate_policy
-from ..core.plan import CommPolicy, make_policy, measure_policy
-from .spec import (
-    ChurnEvent,
-    RoundReport,
-    ScenarioResult,
-    ScenarioSpec,
-    applicable_churn,
+from ..core.graph import TopologySpec
+from ..core.netsim import SimResult, TestbedSpec
+from . import executors
+from .cache import PlanCache
+from .executors import (  # noqa: F401  (re-exported: historical front door)
+    EXECUTORS,
+    GOSSIP_MODES,
+    Executor,
+    _member_testbed,
+    membership_rounds,
+    resolve_gossip_mode,
 )
+from .spec import ScenarioResult, ScenarioSpec
 
-EXECUTORS = ("plan", "engine", "netsim", "jax")
-
-# scenario protocol name -> repro.dfl.collectives gossip mode
-GOSSIP_MODES = {
-    "dissemination": "dissemination",
-    "mosgu": "dissemination",
-    "segmented": "segmented",
-    "segmented_gossip": "segmented",
-    "tree_allreduce": "tree_allreduce",
-    "flooding": "flooding",
-}
+# back-compat alias (pre-registry name of the lifecycle driver)
+_membership_rounds = membership_rounds
 
 
-def resolve_gossip_mode(protocol: str) -> str:
-    """The JAX collective mode for a scenario protocol (shared by the jax
-    executor and every scenario-driven training entry point)."""
-    try:
-        return GOSSIP_MODES[protocol]
-    except KeyError:
-        raise ValueError(
-            f"scenario protocol {protocol!r} has no JAX gossip mode; "
-            f"known: {sorted(GOSSIP_MODES)}") from None
+def run_scenario(spec: ScenarioSpec,
+                 executor: Union[str, Executor] = "engine",
+                 record_trace: bool = False,
+                 plan_cache: Optional[PlanCache] = None) -> ScenarioResult:
+    """Execute a declared scenario end-to-end on one executor.
 
-
-# ---------------------------------------------------------------------------
-# Moderator lifecycle helpers
-# ---------------------------------------------------------------------------
-
-
-def _file_initial_reports(mod: Moderator, overlay: Graph) -> None:
-    for u in range(overlay.n):
-        costs = {v: float(overlay.adj[u, v]) for v in overlay.neighbors(u)}
-        mod.receive_report(ConnectivityReport(u, f"node{u}", costs))
-
-
-def _apply_churn(mod: Moderator, overlay: Graph,
-                 churn: Sequence[ChurnEvent], round_idx: int) -> List[ChurnEvent]:
-    """Apply this round's membership changes to the moderator's table.
-
-    Feasibility is decided by the shared :func:`applicable_churn` (the same
-    rule set `DFLSession` uses), then applied to the report table here.
+    ``executor`` is a registry name (``executors.names()``) or an
+    :class:`Executor` instance; ``plan_cache`` shares MST/coloring/policy
+    work across calls (a fresh cache per call when omitted).
     """
-    applied, _ = applicable_churn(churn, round_idx, mod.members,
-                                  n_limit=overlay.n)
-    for ev in applied:
-        if ev.action == "leave":
-            mod.remove_node(ev.node)
-        else:
-            costs = {v: float(overlay.adj[ev.node, v])
-                     for v in mod.members if overlay.adj[ev.node, v] > 0}
-            mod.receive_report(ConnectivityReport(ev.node, f"node{ev.node}", costs))
-            for v, c in costs.items():  # symmetric report, as a live ping would
-                mod.reports[v].costs_ms[ev.node] = c
-    return applied
-
-
-def _rotate(mod: Moderator) -> Moderator:
-    """Round-robin vote, tallied by the current moderator (paper III-A)."""
-    members = mod.members
-    cur = mod.moderator_id if mod.moderator_id in members else members[0]
-    candidate = members[(members.index(cur) + 1) % len(members)]
-    return mod.handover(mod.elect_next({u: candidate for u in members}))
-
-
-def _drop_fn(spec: ScenarioSpec, round_idx: int):
-    if spec.drop_rate <= 0:
-        return None
-    rng = np.random.default_rng([spec.drop_seed, round_idx])
-
-    def drop(slot_idx: int, src: int, dst: int) -> bool:
-        return bool(rng.random() < spec.drop_rate)
-
-    return drop
-
-
-def _membership_rounds(spec: ScenarioSpec, overlay: Graph):
-    """The shared per-round moderator driver, identical on every executor.
-
-    Yields ``(round_idx, moderator, members, applied_churn)`` after applying
-    the round's churn events, running the emergency re-election when the
-    current moderator itself left, and enforcing the 2-node floor; rotates
-    the moderator by round-robin vote after control returns.
-    """
-    mod = Moderator(0, spec.mst_algorithm, spec.coloring_algorithm,
-                    protocol=spec.protocol, n_segments=spec.n_segments)
-    _file_initial_reports(mod, overlay)
-    for r in range(spec.rounds):
-        applied = _apply_churn(mod, overlay, spec.churn, r)
-        if mod.moderator_id not in mod.reports:
-            # the moderator itself left: emergency round-robin election
-            mod = mod.handover(mod.elect_next({}))
-        members = mod.members
-        if len(members) < 2:
-            raise ValueError(f"scenario {spec.name!r} dropped below 2 nodes")
-        yield r, mod, members, applied
-        mod = _rotate(mod)
-
-
-# ---------------------------------------------------------------------------
-# Host-side executors (plan / engine / netsim)
-# ---------------------------------------------------------------------------
-
-
-def _proxy_payloads(spec: ScenarioSpec, members: Sequence[int]) -> List:
-    """Small deterministic per-node tensors for the engine executor.
-
-    The queue engine moves real (encoded) payload objects so the codec path
-    — encode at round start, error-feedback residuals across rounds, decode
-    before aggregation — is genuinely exercised; byte accounting still uses
-    the scenario's declared payload size (the jax executor's proxy-parameter
-    pattern). Segmented protocols get one part per segment.
-    """
-    segmented = spec.protocol in ("segmented", "segmented_gossip")
-    n_parts = spec.n_segments if segmented else 1
-    out: List = []
-    for u in members:
-        rng = np.random.default_rng([spec.drop_seed, u])
-        parts = [rng.normal(size=(64,)).astype(np.float32)
-                 for _ in range(n_parts)]
-        out.append(parts if segmented else parts[0])
-    return out
-
-
-def _member_testbed(spec: ScenarioSpec, members: Sequence[int]) -> TestbedSpec:
-    """The underlay restricted to the healthy members (dense reindexing).
-
-    ``phys_n`` follows the *underlay's* declared device count (it may
-    legitimately exceed the overlay), so an explicit TestbedSpec keeps its
-    physical subnet layout under the dense reindexing.
-    """
-    base = spec.testbed()
-    return dataclasses.replace(
-        base, n=len(members), node_ids=tuple(members), phys_n=base.n)
-
-
-def _run_host(spec: ScenarioSpec, executor: str,
-              record_trace: bool) -> ScenarioResult:
-    overlay = spec.overlay_graph()
-    payload_mb = spec.payload_mb()
-    codec = spec.codec_obj()
-
-    reports: List[RoundReport] = []
-    sims: List[SimResult] = []
-    policy: Optional[CommPolicy] = None
-    policy_members: Optional[Tuple[int, ...]] = None
-    policy_stats: Optional[Dict[str, int]] = None
-    engine: Optional[GossipEngine] = None
-    proxy_payloads: Optional[List] = None
-    wire_send_mb = payload_mb  # per-send wire MB under the declared codec
-
-    for r, mod, members, applied in _membership_rounds(spec, overlay):
-        if policy is None or tuple(members) != policy_members:
-            g_sub, _ = mod.build_graph()
-            policy = make_policy(
-                spec.protocol, g_sub,
-                mst_algorithm=spec.mst_algorithm,
-                coloring_algorithm=spec.coloring_algorithm,
-                n_segments=spec.n_segments)
-            policy_members = tuple(members)
-            wire_send_mb = per_send_wire_mb(codec, payload_mb,
-                                            policy.payload_fraction)
-            # slot/tx counts are a pure function of the policy: sweep once
-            # per membership epoch, not once per round
-            if executor == "engine":
-                # the engine outlives the round so a codec's error-feedback
-                # residuals persist across rounds (reset on churn, like the
-                # schedule). Payloads are small deterministic proxies — the
-                # queues and codec really move/encode/decode tensors while
-                # byte *accounting* stays analytic at the declared size (the
-                # proxy-parameter pattern of the jax executor).
-                engine = GossipEngine(policy=policy, codec=codec)
-                policy_stats = None
-                proxy_payloads = _proxy_payloads(spec, members) \
-                    if codec is not None else None
-            else:
-                policy_stats = measure_policy(policy)
-
-        common = dict(round=r, protocol=spec.protocol, members=list(members),
-                      moderator=mod.moderator_id,
-                      churn_applied=[ev.to_dict() for ev in applied])
-        if executor == "plan":
-            tx = policy_stats["transmissions"]
-            reports.append(RoundReport(
-                n_slots=policy_stats["n_slots"], transmissions=tx,
-                bytes_mb=tx * payload_mb * policy.payload_fraction,
-                bytes_on_wire_mb=tx * wire_send_mb, **common))
-        elif executor == "engine":
-            engine.drop_fn = _drop_fn(spec, r)
-            first_report = len(engine.reports)
-            n_slots = engine.run_round(r, proxy_payloads)
-            round_reports = engine.reports[first_report:]
-            sent = sum(len(rep.sends) for rep in round_reports)
-            drops = sum(len(rep.dropped) for rep in round_reports)
-            attempted = sent + drops  # a dropped transfer still burned wire time
-            reports.append(RoundReport(
-                n_slots=n_slots, transmissions=attempted,
-                bytes_mb=attempted * payload_mb * policy.payload_fraction,
-                bytes_on_wire_mb=attempted * wire_send_mb,
-                drops=drops, **common))
-        else:  # netsim
-            sim = simulate_policy(policy, _member_testbed(spec, members),
-                                  payload_mb, record_trace=record_trace,
-                                  codec=codec)
-            sims.append(sim)
-            reports.append(RoundReport(
-                n_slots=policy_stats["n_slots"], transmissions=sim.n_transfers,
-                bytes_mb=sim.n_transfers * payload_mb * policy.payload_fraction,
-                bytes_on_wire_mb=sim.bytes_on_wire_mb,
-                total_time_s=sim.total_time_s,
-                mean_transfer_s=sim.mean_transfer_s,
-                mean_bandwidth_mbps=sim.mean_bandwidth_mbps,
-                max_concurrency=sim.max_concurrency, **common))
-
-    return ScenarioResult(
-        scenario=spec.name, executor=executor, protocol=spec.protocol,
-        payload_mb=payload_mb, rounds=reports, spec=spec.to_dict(),
-        sim_results=sims)
-
-
-# ---------------------------------------------------------------------------
-# JAX collectives executor
-# ---------------------------------------------------------------------------
-
-
-def _run_jax(spec: ScenarioSpec) -> ScenarioResult:
-    import jax
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-    from ..dfl.collectives import gossip_collective_bytes, gossip_exchange
-    from ..dfl.session import _plan_for_members
-
-    mode = resolve_gossip_mode(spec.protocol)
-    if mode == "flooding" and spec.churn:
-        raise ValueError("the flooding collective (all_gather) cannot mask "
-                         "churned nodes; use an MST mode for churn scenarios")
-    codec = spec.codec_obj()
-    n = spec.n
-    if len(jax.devices()) < n:
-        raise RuntimeError(
-            f"jax executor needs >= {n} devices for a {n}-node scenario; on "
-            f"CPU set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
-            "before importing jax")
-    mesh = Mesh(np.asarray(jax.devices()[:n]).reshape(n), ("data",))
-    overlay = spec.overlay_graph()
-    payload_mb = spec.payload_mb()
-
-    # proxy parameters: accounting uses the declared payload size, numerics
-    # are verified on a small sharded tree (exact FedAvg mean everywhere)
-    w = np.arange(n * 4, dtype=np.float32).reshape(n, 4)
-    specs_tree = {"w": P("data")}
-    reports: List[RoundReport] = []
-    plan = None
-    plan_members: Optional[Tuple[int, ...]] = None
-    exchange = None
-
-    for r, mod, members, applied in _membership_rounds(spec, overlay):
-        if plan is None or tuple(members) != plan_members:
-            plan = _plan_for_members(mesh, ("data",), set(members),
-                                     n_segments=spec.n_segments,
-                                     full_graph=overlay)
-            plan_members = tuple(members)
-            # one compile per membership epoch, reused across rounds
-            bound_plan = plan
-            exchange = jax.jit(lambda t: gossip_exchange(
-                mode, bound_plan, mesh, t, specs_tree, codec=codec))
-
-        theta = {"w": jax.device_put(
-            np.asarray(w), NamedSharding(mesh, P("data")))}
-        out = exchange(theta)
-        res = np.asarray(out["w"])
-        healthy_mean = w[list(members)].mean(axis=0)
-        masked = sorted(set(range(n)) - set(members))
-        # lossy codecs: verify within the codec's deterministic error bound
-        # (dissemination pays the encode error once per contribution; other
-        # modes re-encode per hop, so scale by the network size). Sparsifying
-        # codecs have no useful bound — the check is skipped (None).
-        bound = 0.0 if codec is None else codec.mean_atol(float(np.abs(w).max()))
-        if bound is None:
-            numerics_ok = None
-        else:
-            atol = max(1e-5, bound * (1 if mode == "dissemination" else n))
-            numerics_ok = bool(np.allclose(res[list(members)], healthy_mean,
-                                           atol=atol))
-            if masked and mode != "flooding":
-                numerics_ok &= bool(np.allclose(res[masked], w[masked], atol=1e-6))
-
-        slot_plan = {"dissemination": plan.dissemination,
-                     "segmented": plan.segmented,
-                     "tree_allreduce": plan.tree}.get(mode)
-        if slot_plan is not None:
-            tx = slot_plan.total_transmissions()
-            n_slots = slot_plan.n_slots
-        else:  # flooding = all_gather: every node receives N-1 replicas
-            tx = len(members) * (len(members) - 1)
-            n_slots = 1
-        bytes_mb = gossip_collective_bytes(mode, plan, payload_mb * 1e6) / 1e6
-        wire_mb = gossip_collective_bytes(mode, plan, payload_mb * 1e6,
-                                          codec=codec) / 1e6
-        reports.append(RoundReport(
-            round=r, protocol=spec.protocol, members=list(members),
-            moderator=mod.moderator_id, n_slots=n_slots, transmissions=tx,
-            bytes_mb=bytes_mb, bytes_on_wire_mb=wire_mb,
-            numerics_ok=numerics_ok,
-            churn_applied=[ev.to_dict() for ev in applied]))
-
-    return ScenarioResult(
-        scenario=spec.name, executor="jax", protocol=spec.protocol,
-        payload_mb=payload_mb, rounds=reports, spec=spec.to_dict())
-
-
-# ---------------------------------------------------------------------------
-# Public API
-# ---------------------------------------------------------------------------
-
-
-def run_scenario(spec: ScenarioSpec, executor: str = "engine",
-                 record_trace: bool = False) -> ScenarioResult:
-    """Execute a declared scenario end-to-end on one executor."""
-    spec.validate()
-    if executor not in EXECUTORS:
-        raise ValueError(f"unknown executor {executor!r}; known: {EXECUTORS}")
-    if executor == "jax":
-        return _run_jax(spec)
-    return _run_host(spec, executor, record_trace)
+    return executors.get(executor).execute(spec, record_trace=record_trace,
+                                           plan_cache=plan_cache)
 
 
 def compare_protocols(
@@ -386,26 +81,31 @@ def compare_protocols(
     protocols: Optional[Sequence[str]] = None,
     n_segments: int = 4,
 ) -> Dict[str, SimResult]:
-    """Run protocols on one (topology, model size) through the scenario API.
+    """Run protocols on one (topology, model size) — a one-axis sweep.
 
     Same contract as the historical ``repro.core.netsim.compare_protocols``
-    (which now delegates here): the default reproduces the paper's two-column
+    (which delegates here): the default reproduces the paper's two-column
     tables; ``protocols`` runs any registry subset to completion over the
-    same overlay. Each row is one single-round :class:`ScenarioSpec` executed
-    on the netsim executor.
+    same overlay. The whole comparison is one :class:`SweepSpec` with a
+    ``protocol`` axis, executed on the netsim executor through
+    :func:`run_sweep` — one MST/coloring per unique member subgraph, shared
+    across the protocol cells via the plan cache.
     """
+    from .sweep import SweepSpec, run_sweep  # local: sweep imports executors
+
     if protocols is not None:
         names = {p: p for p in protocols}
     elif full_dissemination:
         names = {"broadcast": "flooding", "mosgu": "dissemination"}
     else:
         names = {"broadcast": "broadcast_exchange", "mosgu": "mosgu_exchange"}
-    overlay = TopologySpec(kind=topology, n=n, seed=seed)
-    out: Dict[str, SimResult] = {}
-    for key, proto in names.items():
-        s = ScenarioSpec(
-            name=f"compare/{topology}/{proto}", overlay=overlay,
-            underlay=spec, protocol=proto, payload=model_mb,
-            n_segments=n_segments, rounds=1)
-        out[key] = run_scenario(s, executor="netsim").sim_results[0]
-    return out
+    sweep = SweepSpec(
+        name=f"compare/{topology}",
+        base=ScenarioSpec(
+            name=f"compare/{topology}", overlay=TopologySpec(
+                kind=topology, n=n, seed=seed),
+            underlay=spec, payload=model_mb, n_segments=n_segments, rounds=1),
+        grid={"protocol": tuple(names.values())})
+    result = run_sweep(sweep, executor="netsim")
+    return {key: cell.result.sim_results[0]
+            for key, cell in zip(names, result.cells)}

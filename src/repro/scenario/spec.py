@@ -185,7 +185,9 @@ class ScenarioSpec:
         return None if c.name == "fp32" else c
 
     def replace(self, **changes) -> "ScenarioSpec":
-        return dataclasses.replace(self, **changes)
+        """Field update that re-validates, so sweep-expanded cells (and any
+        other derived spec) cannot silently carry an invalid combination."""
+        return dataclasses.replace(self, **changes).validate()
 
     # -- validation ----------------------------------------------------------
     def validate(self) -> "ScenarioSpec":

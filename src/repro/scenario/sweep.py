@@ -1,0 +1,331 @@
+"""Sweep API: one call runs a whole experiment grid on any executor.
+
+The paper's headline results are *grids*, not points — Tables III–V sweep
+topology family x payload size x protocol, and the segmented-gossip /
+DeceFL lines of work sweep node counts and message capacities. A
+:class:`SweepSpec` declares such a grid once:
+
+    from repro.scenario import ScenarioSpec, SweepSpec, run_sweep
+
+    sweep = SweepSpec(
+        name="table3",
+        base=ScenarioSpec(payload="b0", rounds=1),
+        grid={"topology": ("complete", "erdos_renyi"),        # cartesian
+              "protocol": ("broadcast_exchange", "mosgu_exchange")},
+        zip={"payload": ("v3s", "b0"), "n_segments": (2, 4)})  # lockstep
+
+    result = run_sweep(sweep, executor="netsim")
+    print(result.to_json())          # flat, JSON-serializable cell table
+    result.marginals()["topology"]   # per-axis aggregate metrics
+
+``grid`` axes expand to their cartesian product (declaration order, last
+axis fastest); ``zip`` axes advance in lockstep and behave as one trailing
+grid axis. An axis may be any :class:`ScenarioSpec` field (``protocol``,
+``payload``, ``codec``, ``n_segments``, ``rounds``, ``churn``,
+``drop_rate``, ``drop_seed``, …), any overlay field via ``overlay.<field>``
+(with aliases ``topology`` -> ``overlay.kind`` and ``n`` -> ``overlay.n``),
+or ``seed`` — which threads into *both* the overlay generator seed and the
+link-failure seed. Every cell is materialized with
+:meth:`ScenarioSpec.replace`, which re-validates, so a sweep cannot emit an
+invalid field combination silently.
+
+Execution shares work across cells through one
+:class:`~repro.scenario.cache.PlanCache`: MST + coloring + policy are
+computed once per unique (overlay, member set, protocol, n_segments), and
+the ``plan`` executor batches the whole grid's counting in a single
+vectorized numpy pass (``Executor.run_cells``) — a 32-cell payload x codec
+grid costs one plan compile instead of 32 (>= 5x over the serial loop,
+recorded in ``BENCH_sweep.json``). Cell results are bit-identical to
+serial ``run_scenario`` calls (pinned by ``tests/test_sweep.py``).
+
+Named sweeps live in the scenario registry
+(``scenarios.get_sweep("table3_full")``); ``register_sweep`` adds new ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.graph import TopologySpec
+from . import executors
+from .cache import PlanCache
+from .executors import Executor
+from .spec import ScenarioResult, ScenarioSpec
+
+# axis aliases: friendly sweep names for overlay generator fields
+AXIS_ALIASES = {"topology": "overlay.kind", "n": "overlay.n"}
+
+_SPEC_FIELDS = {f.name for f in dataclasses.fields(ScenarioSpec)}
+_OVERLAY_FIELDS = {f.name for f in dataclasses.fields(TopologySpec)}
+
+
+def _resolve_axis(axis: str) -> str:
+    """Canonical axis name; raises for anything a sweep cannot vary."""
+    name = AXIS_ALIASES.get(axis, axis)
+    if name == "seed":
+        return name  # threads into overlay.seed AND drop_seed
+    if name.startswith("overlay."):
+        f = name.split(".", 1)[1]
+        if f not in _OVERLAY_FIELDS:
+            raise ValueError(
+                f"unknown overlay axis {axis!r}; overlay fields: "
+                f"{sorted(_OVERLAY_FIELDS)}")
+        return name
+    if name not in _SPEC_FIELDS:
+        raise ValueError(
+            f"unknown sweep axis {axis!r}; expected a ScenarioSpec field "
+            f"({sorted(_SPEC_FIELDS)}), 'overlay.<field>', 'seed', or an "
+            f"alias ({sorted(AXIS_ALIASES)})")
+    return name
+
+
+@dataclass(frozen=True)
+class SweepCell:
+    """One expanded grid point: its coordinates and the concrete spec."""
+
+    index: int
+    coords: Dict[str, Any]
+    spec: ScenarioSpec
+
+
+@dataclass
+class SweepSpec:
+    """A declarative experiment grid over one base :class:`ScenarioSpec`."""
+
+    name: str = "sweep"
+    base: ScenarioSpec = field(default_factory=ScenarioSpec)
+    grid: Mapping[str, Sequence[Any]] = field(default_factory=dict)
+    zip: Mapping[str, Sequence[Any]] = field(default_factory=dict)
+    description: str = ""
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> "SweepSpec":
+        seen = set()
+        for axis in list(self.grid) + list(self.zip):
+            canon = _resolve_axis(axis)
+            # "seed" fans out to two fields; both count as declared so a
+            # sweep cannot silently clobber one axis with another
+            targets = {"overlay.seed", "drop_seed"} if canon == "seed" \
+                else {canon}
+            if targets & seen:
+                raise ValueError(f"axis {axis!r} declared twice")
+            seen |= targets
+        for axis, values in list(self.grid.items()) + list(self.zip.items()):
+            if len(tuple(values)) == 0:
+                raise ValueError(f"axis {axis!r} has no values")
+        zip_lens = {k: len(tuple(v)) for k, v in self.zip.items()}
+        if len(set(zip_lens.values())) > 1:
+            raise ValueError(
+                f"zip axes must have equal lengths, got {zip_lens}")
+        return self
+
+    # -- expansion -----------------------------------------------------------
+    def axes(self) -> Dict[str, List[Any]]:
+        """All axes (grid first, then zip) with their declared values."""
+        out: Dict[str, List[Any]] = {k: list(v) for k, v in self.grid.items()}
+        out.update({k: list(v) for k, v in self.zip.items()})
+        return out
+
+    @property
+    def n_cells(self) -> int:
+        n = 1
+        for values in self.grid.values():
+            n *= len(tuple(values))
+        if self.zip:
+            n *= len(tuple(next(iter(self.zip.values()))))
+        return n
+
+    def cells(self) -> List[SweepCell]:
+        """Deterministic expansion: cartesian product of the grid axes in
+        declaration order (last axis fastest), with the zip axes advanced in
+        lockstep as one trailing axis. Each cell re-validates."""
+        self.validate()
+        grid_names = list(self.grid)
+        grid_values = [tuple(self.grid[k]) for k in grid_names]
+        zip_names = list(self.zip)
+        zip_rows: List[Tuple[Any, ...]] = (
+            list(zip(*(tuple(self.zip[k]) for k in zip_names)))
+            if zip_names else [()])
+        out: List[SweepCell] = []
+        for combo in itertools.product(*grid_values) if grid_names else [()]:
+            for row in zip_rows:
+                coords = dict(zip(grid_names, combo))
+                coords.update(dict(zip(zip_names, row)))
+                index = len(out)
+                spec = self._materialize(index, coords)
+                out.append(SweepCell(index=index, coords=coords, spec=spec))
+        return out
+
+    def _materialize(self, index: int, coords: Dict[str, Any]) -> ScenarioSpec:
+        """One cell spec: all axis values applied in a single validated
+        ``replace`` (axis order cannot create transiently invalid combos)."""
+        spec_changes: Dict[str, Any] = {}
+        overlay_changes: Dict[str, Any] = {}
+        for axis, value in coords.items():
+            canon = _resolve_axis(axis)
+            if canon == "seed":
+                overlay_changes["seed"] = value
+                spec_changes["drop_seed"] = value
+            elif canon.startswith("overlay."):
+                overlay_changes[canon.split(".", 1)[1]] = value
+            else:
+                spec_changes[canon] = value
+        if overlay_changes:
+            if not isinstance(self.base.overlay, TopologySpec):
+                raise ValueError(
+                    f"overlay axes {sorted(overlay_changes)} need a "
+                    "TopologySpec overlay, not an explicit cost matrix")
+            spec_changes["overlay"] = dataclasses.replace(
+                self.base.overlay, **overlay_changes)
+        tokens = [f"{axis}={value}" if np.isscalar(value)
+                  else f"{axis}[{index}]" for axis, value in coords.items()]
+        spec_changes["name"] = (
+            f"{self.name}/{','.join(tokens)}" if tokens else self.name)
+        return self.base.replace(**spec_changes)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "description": self.description,
+            "base": self.base.to_dict(),
+            "grid": {k: [_jsonable(v) for v in vals]
+                     for k, vals in self.grid.items()},
+            "zip": {k: [_jsonable(v) for v in vals]
+                    for k, vals in self.zip.items()},
+            "n_cells": self.n_cells,
+        }
+
+
+def _jsonable(v: Any) -> Any:
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if hasattr(v, "to_dict"):
+        return v.to_dict()
+    return str(v)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SweepCellResult:
+    """One cell's outcome, carrying its grid coordinates."""
+
+    index: int
+    coords: Dict[str, Any]
+    spec: ScenarioSpec
+    result: ScenarioResult
+
+    def row(self) -> Dict[str, Any]:
+        """The flat table row: coordinates + the cell's aggregate totals."""
+        totals = self.result.to_dict()["totals"]
+        return {"cell": self.index,
+                **{k: _jsonable(v) for k, v in self.coords.items()},
+                "scenario": self.result.scenario,
+                "protocol": self.result.protocol,
+                "payload_mb": self.result.payload_mb,
+                **totals}
+
+
+@dataclass
+class SweepResult:
+    """The whole grid's outcome: a flat cell table plus per-axis marginals,
+    JSON-serializable end-to-end — one call reproduces one paper table."""
+
+    sweep: str
+    executor: str
+    axes: Dict[str, List[Any]]
+    cells: List[SweepCellResult]
+    cache_stats: Dict[str, int] = field(default_factory=dict)
+
+    def __getitem__(self, index: int) -> SweepCellResult:
+        return self.cells[index]
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def table(self) -> List[Dict[str, Any]]:
+        return [c.row() for c in self.cells]
+
+    def marginals(self) -> Dict[str, Dict[str, Dict[str, Any]]]:
+        """Per-axis aggregates: for each axis value, metrics averaged (and
+        summed) over every cell holding that value — the one-line view of
+        which topology/protocol/codec wins along each declared axis."""
+        out: Dict[str, Dict[str, Dict[str, Any]]] = {}
+        for axis, values in self.axes.items():
+            rows: Dict[str, Dict[str, Any]] = {}
+            for value in values:
+                sel = [c.result for c in self.cells
+                       if axis in c.coords and c.coords[axis] == value]
+                if not sel:
+                    continue
+                times = [r.total_time_s for r in sel
+                         if r.total_time_s is not None]
+                rows[str(_jsonable(value))] = {
+                    "cells": len(sel),
+                    "total_transmissions": int(
+                        sum(r.total_transmissions for r in sel)),
+                    "mean_transmissions": float(np.mean(
+                        [r.total_transmissions for r in sel])),
+                    "mean_bytes_mb": float(np.mean(
+                        [r.total_bytes_mb for r in sel])),
+                    "mean_bytes_on_wire_mb": float(np.mean(
+                        [r.total_bytes_on_wire_mb for r in sel])),
+                    "mean_time_s": (float(np.mean(times)) if times else None),
+                }
+            out[axis] = rows
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "sweep": self.sweep,
+            "executor": self.executor,
+            "axes": {k: [_jsonable(v) for v in vals]
+                     for k, vals in self.axes.items()},
+            "n_cells": len(self.cells),
+            "cells": self.table(),
+            "marginals": self.marginals(),
+            "cache": self.cache_stats,
+        }
+
+    def to_json(self, **kwargs) -> str:
+        kwargs.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def run_sweep(sweep: SweepSpec,
+              executor: Union[str, Executor] = "plan",
+              plan_cache: Optional[PlanCache] = None,
+              record_trace: bool = False) -> SweepResult:
+    """Execute every cell of a sweep on one executor, sharing plan work.
+
+    All cells run through one :class:`PlanCache` (MST/coloring/policy once
+    per unique member subgraph); executors with a batched path (``plan``)
+    process the whole grid in one vectorized pass via
+    :meth:`Executor.run_cells`. Each cell's :class:`ScenarioResult` is
+    exactly what a serial ``run_scenario(cell.spec, executor=...)`` returns.
+    """
+    ex = executors.get(executor)
+    cells = sweep.cells()
+    cache = plan_cache if plan_cache is not None else PlanCache()
+    results = ex.run_cells(cells, plan_cache=cache, record_trace=record_trace)
+    return SweepResult(
+        sweep=sweep.name, executor=ex.name, axes=sweep.axes(),
+        cells=[SweepCellResult(index=c.index, coords=c.coords, spec=c.spec,
+                               result=r) for c, r in zip(cells, results)],
+        cache_stats=cache.stats())

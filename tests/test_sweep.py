@@ -1,0 +1,435 @@
+"""Sweep API: grid/zip expansion, the pluggable executor registry, the
+cross-cell plan cache, and sweep-vs-serial equality on every executor.
+
+Pins the PR-4 tentpole properties:
+  * ``SweepSpec`` expansion is deterministic (grid product order, zip
+    lockstep, seed threading into overlay + drop seeds),
+  * every cell a sweep runs is *exactly* what serial ``run_scenario``
+    returns for the same spec — on the batched plan path and on the
+    engine/netsim/jax executors,
+  * ``PlanCache`` computes MST/coloring/policy once per unique key and its
+    hit accounting is observable,
+  * executors are a registry: a third-party executor plugs into both
+    ``run_scenario`` and ``run_sweep`` without touching the runner,
+  * ``ScenarioSpec.replace`` re-validates, so sweeps cannot emit invalid
+    field combinations silently,
+  * the batched counting path beats the serial loop on a shared-plan grid.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.graph import TopologySpec
+from repro.scenario import (
+    ChurnEvent,
+    PlanCache,
+    ScenarioSpec,
+    SweepSpec,
+    executors,
+    run_scenario,
+    run_sweep,
+    scenarios,
+)
+
+
+def small_base(**kw) -> ScenarioSpec:
+    kw.setdefault("overlay", TopologySpec(kind="erdos_renyi", n=8, seed=3))
+    kw.setdefault("payload", 5.0)
+    return ScenarioSpec(**kw)
+
+
+class TestExpansion:
+    def test_grid_is_cartesian_product_last_axis_fastest(self):
+        sw = SweepSpec(base=small_base(),
+                       grid={"payload": (1.0, 2.0), "codec": ("fp32", "int8")})
+        cells = sw.cells()
+        assert [c.coords for c in cells] == [
+            {"payload": 1.0, "codec": "fp32"},
+            {"payload": 1.0, "codec": "int8"},
+            {"payload": 2.0, "codec": "fp32"},
+            {"payload": 2.0, "codec": "int8"},
+        ]
+        assert [c.index for c in cells] == [0, 1, 2, 3]
+        assert sw.n_cells == 4
+
+    def test_expansion_is_deterministic(self):
+        sw = SweepSpec(base=small_base(),
+                       grid={"protocol": ("mosgu", "segmented"),
+                             "payload": (1.0, 2.0, 3.0)})
+        a, b = sw.cells(), sw.cells()
+        assert [c.coords for c in a] == [c.coords for c in b]
+        assert [c.spec.to_dict() for c in a] == [c.spec.to_dict() for c in b]
+
+    def test_zip_axes_advance_in_lockstep(self):
+        sw = SweepSpec(base=small_base(),
+                       zip={"payload": (1.0, 2.0), "n_segments": (2, 4)})
+        cells = sw.cells()
+        assert [(c.spec.payload, c.spec.n_segments) for c in cells] == \
+            [(1.0, 2), (2.0, 4)]
+
+    def test_zip_crossed_with_grid_as_trailing_axis(self):
+        sw = SweepSpec(base=small_base(),
+                       grid={"protocol": ("mosgu", "flooding")},
+                       zip={"payload": (1.0, 2.0), "n_segments": (2, 4)})
+        assert [(c.spec.protocol, c.spec.payload) for c in sw.cells()] == [
+            ("mosgu", 1.0), ("mosgu", 2.0),
+            ("flooding", 1.0), ("flooding", 2.0)]
+
+    def test_zip_length_mismatch_raises(self):
+        sw = SweepSpec(base=small_base(),
+                       zip={"payload": (1.0, 2.0), "n_segments": (2, 4, 8)})
+        with pytest.raises(ValueError, match="equal lengths"):
+            sw.cells()
+
+    def test_unknown_axis_raises(self):
+        with pytest.raises(ValueError, match="unknown sweep axis"):
+            SweepSpec(base=small_base(), grid={"warp_factor": (9,)}).validate()
+
+    def test_duplicate_axis_raises(self):
+        sw = SweepSpec(base=small_base(), grid={"topology": ("complete",)},
+                       zip={"overlay.kind": ("complete",)})
+        with pytest.raises(ValueError, match="declared twice"):
+            sw.validate()
+
+    def test_seed_threads_into_overlay_and_drop_seed(self):
+        sw = SweepSpec(base=small_base(drop_rate=0.1), grid={"seed": (1, 2)})
+        cells = sw.cells()
+        assert [(c.spec.overlay.seed, c.spec.drop_seed) for c in cells] == \
+            [(1, 1), (2, 2)]
+
+    def test_seed_axis_conflicts_with_its_fanout_targets(self):
+        """'seed' writes overlay.seed and drop_seed; declaring either
+        alongside it must fail loudly, not silently clobber."""
+        for other in ("overlay.seed", "drop_seed"):
+            sw = SweepSpec(base=small_base(), grid={other: (10, 20)},
+                           zip={"seed": (0, 1)})
+            with pytest.raises(ValueError, match="declared twice"):
+                sw.validate()
+
+    def test_overlay_axes_and_aliases(self):
+        sw = SweepSpec(base=small_base(),
+                       grid={"topology": ("complete", "watts_strogatz"),
+                             "n": (6, 10)})
+        kinds = [(c.spec.overlay.kind, c.spec.overlay.n) for c in sw.cells()]
+        assert kinds == [("complete", 6), ("complete", 10),
+                         ("watts_strogatz", 6), ("watts_strogatz", 10)]
+
+    def test_overlay_axis_on_matrix_overlay_raises(self):
+        adj = np.array([[0, 1], [1, 0]], float)
+        sw = SweepSpec(base=ScenarioSpec(overlay=adj, payload=1.0),
+                       grid={"n": (4,)})
+        with pytest.raises(ValueError, match="TopologySpec overlay"):
+            sw.cells()
+
+    def test_invalid_cell_combination_is_rejected_at_expansion(self):
+        """replace() re-validates, so a bad axis value fails loudly."""
+        sw = SweepSpec(base=small_base(), grid={"protocol": ("warp-dial",)})
+        with pytest.raises(ValueError, match="unknown protocol"):
+            sw.cells()
+
+    def test_churn_axis_validates_against_cell_rounds(self):
+        # churn beyond the round range is invalid in one cell even though
+        # the base alone was fine — the validated replace catches it
+        sw = SweepSpec(base=small_base(rounds=4,
+                                       churn=(ChurnEvent(3, "leave", 1),)),
+                       grid={"rounds": (2,)})
+        with pytest.raises(ValueError, match="outside round range"):
+            sw.cells()
+
+
+class TestReplaceValidation:
+    def test_replace_revalidates(self):
+        spec = scenarios.get("paper_table3")
+        with pytest.raises(ValueError, match="unknown protocol"):
+            spec.replace(protocol="carrier-pigeon")
+        with pytest.raises(ValueError, match="unknown codec"):
+            spec.replace(codec="middle-out")
+
+    def test_replace_valid_change_still_works(self):
+        spec = scenarios.get("paper_table3").replace(codec="int8", rounds=2)
+        assert spec.codec == "int8" and spec.rounds == 2
+
+
+class TestSweepVsSerial:
+    """The acceptance criterion: every cell's ScenarioResult equals serial
+    run_scenario for the same spec — including the batched plan path."""
+
+    def _sweep(self):
+        return SweepSpec(
+            name="eq",
+            base=small_base(rounds=2, churn=(ChurnEvent(1, "leave", 2),)),
+            grid={"payload": (1.0, 5.0), "codec": ("fp32", "int8")})
+
+    @pytest.mark.parametrize("executor", ["plan", "engine", "netsim"])
+    def test_cells_equal_serial(self, executor):
+        res = run_sweep(self._sweep(), executor=executor)
+        assert len(res.cells) == 4
+        for cell in res.cells:
+            serial = run_scenario(cell.spec, executor=executor)
+            assert serial.to_dict() == cell.result.to_dict(), cell.coords
+
+    def test_plan_batched_path_matches_protocol_axis(self):
+        """Protocol axes change the plan per cell; the batched pass must
+        keep them distinct."""
+        sw = SweepSpec(name="protos", base=small_base(),
+                       grid={"protocol": ("mosgu", "segmented", "flooding",
+                                          "tree_allreduce")})
+        res = run_sweep(sw, executor="plan")
+        for cell in res.cells:
+            serial = run_scenario(cell.spec, executor="plan")
+            assert serial.to_dict() == cell.result.to_dict(), cell.coords
+
+    def test_jax_executor_cells_equal_serial(self):
+        """The jax executor through run_sweep, in a subprocess with a
+        4-device CPU mesh (the registry executor path end-to-end)."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        code = textwrap.dedent("""
+            from repro.core.graph import TopologySpec
+            from repro.scenario import (ScenarioSpec, SweepSpec, run_scenario,
+                                        run_sweep)
+            sw = SweepSpec(
+                base=ScenarioSpec(
+                    overlay=TopologySpec(kind="complete", n=4, seed=0),
+                    protocol="tree_allreduce", payload=2.0),
+                grid={"payload": (2.0, 8.0)})
+            res = run_sweep(sw, executor="jax")
+            ok = all(run_scenario(c.spec, executor="jax").to_dict()
+                     == c.result.to_dict() for c in res.cells)
+            numerics = all(r.numerics_ok for c in res.cells
+                           for r in c.result.rounds)
+            print("OK", ok, numerics, len(res.cells))
+        """)
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, timeout=520)
+        assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+        assert out.stdout.strip() == "OK True True 2"
+
+
+class TestPlanCache:
+    def test_hit_accounting_on_shared_plan_grid(self):
+        """payload x codec axes share one plan: exactly one policy build."""
+        cache = PlanCache()
+        sw = SweepSpec(base=small_base(),
+                       grid={"payload": (1.0, 2.0, 3.0),
+                             "codec": ("fp32", "int8")})
+        run_sweep(sw, executor="plan", plan_cache=cache)
+        s = cache.stats()
+        assert s["unique_policies"] == 1
+        assert s["policy_misses"] == 1
+        assert s["policy_hits"] == 5
+        assert s["measure_misses"] == 1
+        assert s["trajectory_misses"] == 1
+        assert s["trajectory_hits"] == 5
+
+    def test_protocol_axis_creates_one_policy_each(self):
+        cache = PlanCache()
+        sw = SweepSpec(base=small_base(),
+                       grid={"protocol": ("mosgu", "segmented", "flooding")})
+        run_sweep(sw, executor="plan", plan_cache=cache)
+        s = cache.stats()
+        assert s["unique_policies"] == 3
+        assert s["unique_overlays"] == 1
+        assert s["unique_subgraphs"] == 1
+
+    def test_cache_shared_across_run_scenario_calls(self):
+        cache = PlanCache()
+        spec = small_base()
+        a = run_scenario(spec, executor="plan", plan_cache=cache)
+        b = run_scenario(spec, executor="plan", plan_cache=cache)
+        assert a.to_dict() == b.to_dict()
+        assert cache.counters["policy_misses"] == 1
+        assert cache.counters["policy_hits"] == 1
+
+    def test_cache_reuse_across_executors_is_safe(self):
+        """Cached policies are stateful but reset by every consumer: an
+        engine run between two plan runs must not perturb accounting."""
+        cache = PlanCache()
+        spec = small_base(rounds=2)
+        p1 = run_scenario(spec, executor="plan", plan_cache=cache)
+        run_scenario(spec, executor="engine", plan_cache=cache)
+        p2 = run_scenario(spec, executor="plan", plan_cache=cache)
+        assert p1.to_dict() == p2.to_dict()
+
+    def test_batched_sweep_beats_serial_loop(self):
+        """The tentpole perf claim at test scale: a shared-plan grid on the
+        batched counting path is multiples faster than the serial loop
+        (BENCH_sweep.json records the full 32-cell, >=5x measurement)."""
+        sw = SweepSpec(
+            base=ScenarioSpec(
+                overlay=TopologySpec(kind="watts_strogatz", n=200, seed=1),
+                payload=21.2),
+            grid={"payload": (1.0, 2.0, 4.0, 8.0),
+                  "codec": ("fp32", "int8")})
+        cells = sw.cells()
+        t0 = time.perf_counter()
+        serial = [run_scenario(c.spec, executor="plan") for c in cells]
+        t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        swept = run_sweep(sw, executor="plan")
+        t_sweep = time.perf_counter() - t0
+        assert all(s.to_dict() == c.result.to_dict()
+                   for s, c in zip(serial, swept.cells))
+        assert t_sweep * 3 < t_serial, (t_sweep, t_serial)
+
+
+class TestExecutorRegistry:
+    def test_builtins_registered_with_capabilities(self):
+        assert executors.names() == ["plan", "engine", "netsim", "jax"]
+        caps = executors.capability_table()
+        assert caps["engine"]["supports_drops"]
+        assert caps["netsim"]["provides_timing"]
+        assert caps["jax"]["provides_numerics"]
+        assert caps["plan"]["counting_only"]
+
+    def test_unknown_executor_raises(self):
+        with pytest.raises(ValueError, match="unknown executor"):
+            run_scenario(small_base(), executor="abacus")
+
+    def test_third_party_executor_plugs_into_scenario_and_sweep(self):
+        """The pluggability claim: a registered executor works through
+        run_scenario and run_sweep with no runner changes."""
+
+        @executors.register("null-counter")
+        class NullExecutor(executors.Executor):
+            counting_only = True
+
+            def run_round(self, rctx):
+                return rctx.report(n_slots=0, transmissions=len(rctx.members),
+                                   bytes_mb=0.0)
+
+        try:
+            spec = small_base(rounds=2)
+            res = run_scenario(spec, executor="null-counter")
+            assert res.executor == "null-counter"
+            assert [r.transmissions for r in res.rounds] == [8, 8]
+            sw = SweepSpec(base=spec, grid={"payload": (1.0, 2.0)})
+            sres = run_sweep(sw, executor="null-counter")
+            assert len(sres.cells) == 2
+            assert all(c.result.executor == "null-counter"
+                       for c in sres.cells)
+        finally:
+            executors._REGISTRY.pop("null-counter", None)
+
+    def test_executor_instance_passthrough(self):
+        inst = executors.get("plan")
+        res = run_scenario(small_base(), executor=type(inst)())
+        assert res.executor == "plan"
+
+    def test_configured_executor_instance_keeps_state_through_sweep(self):
+        """run_sweep must run the instance it was handed — constructor
+        configuration survives across cells."""
+
+        class ScaledExecutor(executors.Executor):
+            name = "scaled"
+
+            def __init__(self, scale):
+                self.scale = scale
+
+            def run_round(self, rctx):
+                return rctx.report(n_slots=0, bytes_mb=0.0,
+                                   transmissions=self.scale)
+
+        sw = SweepSpec(base=small_base(), grid={"payload": (1.0, 2.0)})
+        res = run_sweep(sw, executor=ScaledExecutor(7))
+        assert [c.result.total_transmissions for c in res.cells] == [7, 7]
+
+
+class TestNamedSweeps:
+    def test_registry_lists_named_sweeps(self):
+        assert {"table3_full", "payload_latency_curve",
+                "codec_x_protocol"} <= set(scenarios.sweep_names())
+
+    def test_unknown_sweep_raises(self):
+        with pytest.raises(ValueError, match="unknown sweep"):
+            scenarios.get_sweep("does-not-exist")
+
+    def test_table3_full_shape(self):
+        sw = scenarios.get_sweep("table3_full")
+        assert sw.n_cells == 32
+        assert list(sw.axes()) == ["topology", "payload", "protocol"]
+
+    def test_table3_full_reproduces_paper_structure(self):
+        """One call, one paper table: MOSGU beats broadcast on transmissions
+        in every one of the 16 (topology, payload) cells."""
+        res = run_sweep(scenarios.get_sweep("table3_full"), executor="plan")
+        by_coords = {tuple(sorted(c.coords.items())): c.result
+                     for c in res.cells}
+        for topo in ("complete", "erdos_renyi", "watts_strogatz",
+                     "barabasi_albert"):
+            for payload in ("v3s", "v2", "b0", "v3l"):
+                mosgu = by_coords[tuple(sorted({
+                    "topology": topo, "payload": payload,
+                    "protocol": "mosgu_exchange"}.items()))]
+                bcast = by_coords[tuple(sorted({
+                    "topology": topo, "payload": payload,
+                    "protocol": "broadcast_exchange"}.items()))]
+                assert mosgu.total_transmissions < bcast.total_transmissions
+        # broadcast is overlay-independent (the paper's merged cells)
+        m = res.marginals()["protocol"]["broadcast_exchange"]
+        assert m["mean_transmissions"] == 90.0
+
+    def test_payload_latency_curve_marginals_monotone(self):
+        res = run_sweep(scenarios.get_sweep("payload_latency_curve"),
+                        executor="netsim")
+        rows = [(c.spec.payload_mb(), c.result.total_time_s)
+                for c in res.cells]
+        ordered = sorted(rows)
+        assert [t for _, t in ordered] == sorted(t for _, t in ordered)
+
+
+class TestSweepResult:
+    def test_round_trips_through_json(self):
+        res = run_sweep(scenarios.get_sweep("codec_x_protocol"),
+                        executor="plan")
+        d = json.loads(res.to_json())
+        assert d["sweep"] == "codec_x_protocol"
+        assert d["executor"] == "plan"
+        assert d["n_cells"] == 10 == len(d["cells"])
+        assert set(d["axes"]) == {"codec", "protocol"}
+        assert d["cells"][0]["codec"] == "fp32"
+        assert d["marginals"]["codec"]["int8"]["cells"] == 2
+        assert d["cache"]["unique_policies"] == 2
+
+    def test_marginals_average_over_matching_cells(self):
+        sw = SweepSpec(base=small_base(),
+                       grid={"protocol": ("mosgu", "flooding"),
+                             "payload": (1.0, 2.0)})
+        res = run_sweep(sw, executor="plan")
+        m = res.marginals()
+        assert m["protocol"]["mosgu"]["cells"] == 2
+        tx = [c.result.total_transmissions for c in res.cells
+              if c.coords["protocol"] == "mosgu"]
+        assert m["protocol"]["mosgu"]["mean_transmissions"] == \
+            pytest.approx(np.mean(tx))
+
+    def test_indexing_and_len(self):
+        res = run_sweep(SweepSpec(base=small_base(),
+                                  grid={"payload": (1.0, 2.0)}),
+                        executor="plan")
+        assert len(res) == 2
+        assert res[1].coords == {"payload": 2.0}
+
+
+class TestCompareProtocolsDedup:
+    def test_both_front_doors_are_one_sweep_wrapper(self):
+        """core.netsim and scenario front doors return the same rows (one
+        implementation, delegating through run_sweep)."""
+        from repro.core.netsim import compare_protocols as netsim_compare
+        from repro.scenario import compare_protocols
+
+        a = compare_protocols("erdos_renyi", 14.0, seed=1)
+        b = netsim_compare("erdos_renyi", 14.0, seed=1)
+        assert set(a) == set(b) == {"broadcast", "mosgu"}
+        for k in a:
+            assert a[k].n_transfers == b[k].n_transfers
+            assert a[k].total_time_s == pytest.approx(b[k].total_time_s)
