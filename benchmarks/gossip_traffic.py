@@ -18,7 +18,11 @@ declarative scenario API (:mod:`repro.scenario`) — (with ``--codec``)
 payload codec vs the fp32 baseline on the paper_table3 cell — and (with
 ``--sweep``) ``BENCH_sweep.json``: the ``table3_full`` named sweep through
 :func:`repro.scenario.run_sweep` plus the sweep-vs-serial speedup of the
-batched counting path on a 32-cell grid (acceptance floor: >= 5x).
+batched counting path on a 32-cell grid (acceptance floor: >= 5x), and
+(with ``--underlays``) ``BENCH_underlay.json``: the network-model API's
+analytic-vs-fluid round-time ratio per underlay preset x payload plus the
+batched-analytic-vs-netsim speedup on ``table3_full`` (floor: >= 5x,
+per-cell agreement +-15%).
 ``--list`` prints the scenario and sweep registries and exits.
 """
 from __future__ import annotations
@@ -254,6 +258,70 @@ def sweep_bench(speedup_floor: float = 5.0) -> dict:
     }
 
 
+def underlay_bench(speedup_floor: float = 5.0) -> dict:
+    """The network-model API's trajectory: analytic timing vs the fluid sim.
+
+    1. ``wan_sweep`` (underlay preset x payload, 12 cells) on both the
+       ``plan`` executor (analytic timing) and ``netsim`` (fluid reference):
+       the per-cell round-time ratio is the tolerance contract made visible
+       — deterministic given the registry.
+    2. The 32-cell ``table3_full`` grid: one batched ``run_sweep`` on the
+       plan executor (analytic timing for every cell) vs the per-cell
+       ``run_scenario`` netsim loop it replaces — the batched analytic path
+       must be >= ``speedup_floor`` x faster (best of 3 each) while
+       agreeing within +-15% on every cell's round time.
+    """
+    ws = scenarios.get_sweep("wan_sweep")
+    analytic = run_sweep(ws, executor="plan")
+    fluid = run_sweep(ws, executor="netsim")
+    presets: dict = {}
+    for ca, cf in zip(analytic.cells, fluid.cells):
+        row = presets.setdefault(ca.coords["underlay"], {})
+        a, f = ca.result.total_time_s, cf.result.total_time_s
+        row[str(ca.coords["payload"])] = {
+            "fluid_s": round(f, 4), "analytic_s": round(a, 4),
+            "ratio": round(a / f, 4)}
+
+    t3 = scenarios.get_sweep("table3_full")
+    cells = t3.cells()
+    t_netsim, t_plan = [], []
+    for _ in range(3):  # best-of-3: both paths are fast enough to repeat
+        t0 = time.perf_counter()
+        netsim_res = [run_scenario(c.spec, executor="netsim") for c in cells]
+        t_netsim.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        plan_res = run_sweep(t3, executor="plan")
+        t_plan.append(time.perf_counter() - t0)
+    ratios = [p.result.total_time_s / n.total_time_s
+              for p, n in zip(plan_res.cells, netsim_res)]
+    outside = [i for i, r in enumerate(ratios) if not 0.85 <= r <= 1.15]
+    if outside:
+        raise SystemExit(
+            f"analytic timing outside +-15% of the fluid sim on table3_full "
+            f"cells {outside}: {[round(ratios[i], 3) for i in outside]}")
+    speedup = min(t_netsim) / min(t_plan)
+    if speedup < speedup_floor:
+        raise SystemExit(
+            f"batched analytic timing speedup {speedup:.1f}x below the "
+            f"{speedup_floor}x acceptance floor (per-cell netsim "
+            f"{min(t_netsim):.3f}s, batched plan {min(t_plan):.3f}s)")
+    return {
+        "presets": presets,
+        "table3_timing": {
+            "n_cells": len(plan_res.cells),
+            "netsim_s": round(min(t_netsim), 4),
+            "plan_s": round(min(t_plan), 4),
+            "speedup_x": round(speedup, 2),
+            "floor_x": speedup_floor,
+            "max_ratio": round(max(ratios), 4),
+            "min_ratio": round(min(ratios), 4),
+            "cells_within_15pct": len(ratios) - len(outside),
+            "timing_cache": {k: v for k, v in plan_res.cache_stats.items()
+                             if "timing" in k},
+        },
+    }
+
+
 def list_scenarios() -> None:
     width = max(len(n) for n in scenarios.names())
     for name in scenarios.names():
@@ -279,6 +347,7 @@ def main(argv) -> int:
     with_scenarios = "--scenarios" in argv
     with_codec = "--codec" in argv
     with_sweep = "--sweep" in argv
+    with_underlays = "--underlays" in argv
     if with_scenarios:
         # the jax-executor scenario needs a multi-device (CPU) mesh; must be
         # set before jax initializes, and must compose with any XLA_FLAGS
@@ -325,6 +394,19 @@ def main(argv) -> int:
         print(f"  plan cache: {cache['unique_policies']} unique policies for "
               f"{sg['n_cells']} cells "
               f"({cache['policy_hits']} hits / {cache['policy_misses']} misses)")
+    if with_underlays:
+        ub = underlay_bench()
+        with open("BENCH_underlay.json", "w") as f:
+            json.dump(ub, f, indent=2)
+        tt = ub["table3_timing"]
+        print(f"wrote BENCH_underlay.json ({len(ub['presets'])} presets; "
+              f"table3_full {tt['n_cells']} cells)")
+        for preset, rows in ub["presets"].items():
+            ratios = " ".join(f"{p}={r['ratio']:.3f}" for p, r in rows.items())
+            print(f"  {preset:10s} analytic/fluid {ratios}")
+        print(f"  table3_full: netsim {tt['netsim_s']}s -> plan {tt['plan_s']}s "
+              f"= {tt['speedup_x']}x (floor {tt['floor_x']}x, ratios "
+              f"{tt['min_ratio']}..{tt['max_ratio']})")
     if not smoke:
         csv_rows = []
         run(csv_rows)

@@ -15,6 +15,19 @@ from .graph import (  # noqa: F401
 )
 from .gossip import GossipEngine, GossipNode, QueueEntry, fedavg_numpy  # noqa: F401
 from .moderator import ConnectivityReport, Moderator, SchedulePacket  # noqa: F401
+from .network import (  # noqa: F401
+    NETWORK_PRESETS,
+    CompiledNetwork,
+    NetworkSpec,
+    TimingEstimate,
+    TimingProfile,
+    as_network_model,
+    estimate_timing,
+    get_preset,
+    register_preset,
+    router_graph_edges,
+    slot_length_for_network,
+)
 from .plan import (  # noqa: F401
     BroadcastOncePolicy,
     CommPolicy,

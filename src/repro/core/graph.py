@@ -355,13 +355,24 @@ def slot_length_for_colors(
     colors: np.ndarray,
     model_size_mb: float,
     ping_size_bytes: float = 64.0,
+    network=None,
 ) -> float:
     """Moderator's slot computation: max ping among same-colored senders.
 
     For each node, its max ping to neighbours; then the max of those values
     over nodes sharing a color (the slot must cover the slowest same-slot
     transfer).
+
+    With ``network`` (anything :func:`repro.core.network.as_network_model`
+    accepts) the ping extrapolation is replaced by the analytic bottleneck
+    model on the declared underlay — the slot covers the slowest
+    same-colored multicast including link contention, not just raw latency
+    (:func:`repro.core.network.slot_length_for_network`).
     """
+    if network is not None:
+        from .network import slot_length_for_network  # lazy: no cycle
+
+        return slot_length_for_network(g, colors, network, model_size_mb)
     per_node_max = np.zeros(g.n)
     for u in range(g.n):
         ns = g.neighbors(u)

@@ -27,11 +27,18 @@ Metrics match the paper's three tables:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .graph import Graph, TopologySpec, build_mst, color_graph, subnet_of
+from .network import (  # noqa: F401  (LinkId re-exported: historical home)
+    CompiledNetwork,
+    LinkId,
+    NetworkSpec,
+    as_network_model,
+    mask_underlay,
+)
 from .plan import (
     BroadcastOncePolicy,
     CommPolicy,
@@ -43,12 +50,20 @@ from .plan import (
     SlotPlan,
 )
 
-LinkId = Tuple[str, int, int]  # ("access-up"/"access-down", node, -1) or ("trunk", r1, r2)
-
 
 @dataclass
 class TestbedSpec:
-    """Physical underlay: N devices across `n_subnets` routers."""
+    """Physical underlay: N devices across `n_subnets` routers.
+
+    Since the network-model API (:mod:`repro.core.network`) this is a
+    back-compat wrapper over the default paper network — 3 subnets behind a
+    full router mesh, uniform access rates. Routing (:meth:`links_for`) and
+    latency (:meth:`latency`) delegate to the compiled network model built
+    from :meth:`to_network`, so hop counts and trunk traversals are derived
+    from the actual routing path rather than assumed; for the full-mesh
+    default the results are byte-identical to the historical hardcoded
+    0-or-2-hop rule (pinned by ``tests/test_network.py``).
+    """
 
     n: int = 10
     n_subnets: int = 3
@@ -104,20 +119,42 @@ class TestbedSpec:
                              self.n_subnets)
         return subnet_of(node, self.n, self.n_subnets)
 
+    def masked(self, members) -> "TestbedSpec":
+        """The testbed restricted to ``members`` — the shared
+        :func:`repro.core.network.mask_underlay` rule."""
+        return mask_underlay(self, members)
+
+    def to_network(self) -> NetworkSpec:
+        """This testbed as a declarative :class:`NetworkSpec` (mesh fabric)."""
+        return NetworkSpec(
+            name="testbed", n=self.n, n_subnets=self.n_subnets,
+            router_kind="mesh", access_mbps=self.access_mbps,
+            trunk_mbps=self.trunk_mbps, base_latency_s=self.base_latency_s,
+            hop_latency_s=self.hop_latency_s,
+            per_flow_cap_mbps=self.per_flow_cap_mbps,
+            collapse_gamma=self.collapse_gamma, collapse_k0=self.collapse_k0,
+            collapse_ref_mb=self.collapse_ref_mb,
+            node_ids=self.node_ids, phys_n=self.phys_n)
+
+    def _compiled(self) -> CompiledNetwork:
+        """Lazily compiled routing view (rebuilt if routing fields change)."""
+        key = (self.n, self.n_subnets, self.access_mbps, self.trunk_mbps,
+               self.base_latency_s, self.hop_latency_s,
+               self.node_ids, self.phys_n)
+        cached = self.__dict__.get("_net")
+        if cached is None or cached[0] != key:
+            cached = (key, self.to_network().build())
+            self.__dict__["_net"] = cached
+        return cached[1]
+
     def links_for(self, src: int, dst: int) -> List[LinkId]:
-        s, d = self.subnet(src), self.subnet(dst)
-        links: List[LinkId] = [("access-up", src, -1)]
-        if s != d:
-            links.append(("trunk", min(s, d), max(s, d)))
-        links.append(("access-down", dst, -1))
-        return links
+        return self._compiled().links_for(src, dst)
 
     def capacity(self, link: LinkId) -> float:
-        return self.trunk_mbps if link[0] == "trunk" else self.access_mbps
+        return self._compiled().capacity(link)
 
     def latency(self, src: int, dst: int) -> float:
-        hops = 0 if self.subnet(src) == self.subnet(dst) else 2
-        return self.base_latency_s + hops * self.hop_latency_s
+        return self._compiled().latency(src, dst)
 
 
 @dataclass
@@ -151,9 +188,17 @@ class SimResult:
 
 
 class FluidSimulator:
-    """Max-min-ish fair-share fluid flow simulator over the testbed links."""
+    """Max-min-ish fair-share fluid flow simulator over the network links.
 
-    def __init__(self, spec: TestbedSpec, congestion_scale: float = 1.0) -> None:
+    ``spec`` is any *network model* (:class:`TestbedSpec`,
+    :class:`repro.core.network.CompiledNetwork`): the simulator only ever
+    calls ``links_for`` / ``capacity`` / ``latency`` and reads the
+    contention constants, so every underlay shape the network API can
+    declare runs here unchanged.
+    """
+
+    def __init__(self, spec: Union[TestbedSpec, CompiledNetwork],
+                 congestion_scale: float = 1.0) -> None:
         self.spec = spec
         self.congestion_scale = congestion_scale
         self.t = 0.0
@@ -257,13 +302,13 @@ def _collect(sim: FluidSimulator, send_trace: Optional[List[List[Send]]] = None)
 
 def simulate_policy(
     policy: CommPolicy,
-    spec: TestbedSpec,
+    spec: Union[TestbedSpec, NetworkSpec, CompiledNetwork, str],
     model_mb: float,
     record_trace: bool = False,
     max_slots: int = 100_000,
     codec=None,
 ) -> SimResult:
-    """Execute a communication policy on the fluid testbed.
+    """Execute a communication policy on the fluid network.
 
     Slot policies are self-clocked: slot k+1's sends start when slot k's
     transfers complete (the paper's fixed slot length upper-bounds the same
@@ -273,9 +318,14 @@ def simulate_policy(
     below 1 model segmented gossip), encoded through ``codec`` (a
     :class:`repro.compress.Codec`) when one is given — compressed transfers
     are both smaller and, being shorter-lived, suffer less goodput collapse.
+
+    ``spec`` is any underlay declaration the network API resolves: a
+    :class:`TestbedSpec`, a :class:`repro.core.network.NetworkSpec`, a
+    compiled model, or a preset name (sized to ``policy.n``).
     """
     from ..compress import per_send_wire_mb  # numpy-only, no cycle
 
+    spec = as_network_model(spec, n=policy.n)
     size_mb = per_send_wire_mb(codec, model_mb, policy.payload_fraction)
     sim = FluidSimulator(spec, (size_mb / spec.collapse_ref_mb) ** 0.5)
     trace: Optional[List[List[Send]]] = [] if record_trace else None

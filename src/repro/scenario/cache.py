@@ -8,7 +8,7 @@ topology x protocol grid only has as many unique plans as unique
 ``(member set, overlay, protocol, n_segments)`` combinations. Before the
 sweep API every cell recomputed all of it.
 
-:class:`PlanCache` memoizes the four deterministic stages:
+:class:`PlanCache` memoizes the deterministic stages:
 
 =============  ==========================================================
 stage          key
@@ -19,6 +19,9 @@ subgraph
 policy         (overlay, members, protocol, n_segments, mst/coloring
                algorithm, first color) — ``make_policy`` output
 measure        policy key — ``measure_policy`` slot/transmission counts
+timing         (policy key, underlay fingerprint) — the analytic
+               :class:`~repro.core.network.TimingProfile` (payload-
+               independent; evaluated per wire size)
 =============  ==========================================================
 
 Cached :class:`~repro.core.plan.CommPolicy` objects are stateful but every
@@ -35,6 +38,7 @@ from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 import numpy as np
 
 from ..core.graph import Graph, TopologySpec
+from ..core.network import TimingProfile, _field_tuple, underlay_fingerprint
 from ..core.plan import CommPolicy, make_policy, measure_policy
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -49,10 +53,13 @@ def overlay_fingerprint(spec: "ScenarioSpec") -> Tuple[Any, ...]:
     A :class:`TopologySpec` is identified by its field values (generation is
     deterministic given the spec); an explicit cost matrix by its exact
     bytes, so two numerically identical matrices share cache entries.
+    (Flat ``_field_tuple`` rather than ``dataclasses.astuple`` — the
+    deepcopy recursion inside ``astuple`` dominated sweep-grid key
+    building.)
     """
     ov = spec.overlay
     if isinstance(ov, TopologySpec):
-        return ("topo",) + dataclasses.astuple(ov)
+        return ("topo",) + _field_tuple(ov)
     a = np.asarray(ov, dtype=np.float64)
     return ("matrix", a.shape, a.tobytes())
 
@@ -79,12 +86,14 @@ class PlanCache:
         self._policies: Dict[PolicyKey, CommPolicy] = {}
         self._measures: Dict[PolicyKey, Dict[str, float]] = {}
         self._trajectories: Dict[Tuple[Any, ...], list] = {}
+        self._timings: Dict[Tuple[Any, ...], TimingProfile] = {}
         self.counters: Dict[str, int] = {
             "overlay_hits": 0, "overlay_misses": 0,
             "subgraph_hits": 0, "subgraph_misses": 0,
             "policy_hits": 0, "policy_misses": 0,
             "measure_hits": 0, "measure_misses": 0,
             "trajectory_hits": 0, "trajectory_misses": 0,
+            "timing_hits": 0, "timing_misses": 0,
         }
 
     # -- stages --------------------------------------------------------------
@@ -130,18 +139,45 @@ class PlanCache:
         return pol
 
     def measure(self, spec: "ScenarioSpec", members: Tuple[int, ...],
-                pol: Optional[CommPolicy] = None) -> Dict[str, float]:
-        """Cached ``measure_policy`` counts for one epoch's policy."""
+                pol: Optional[CommPolicy] = None,
+                stats: Optional[Dict[str, float]] = None) -> Dict[str, float]:
+        """Cached ``measure_policy`` counts for one epoch's policy.
+
+        ``stats`` seeds a miss with already-computed counts (e.g. a
+        :meth:`~repro.core.network.TimingProfile.measure_stats` from the
+        timing walk) so consumers needing timing *and* counts walk the
+        policy once."""
         key = policy_key(spec, members)
-        stats = self._measures.get(key)
-        if stats is None:
+        cached = self._measures.get(key)
+        if cached is None:
             self.counters["measure_misses"] += 1
-            if pol is None:
+            if stats is not None:
+                cached = self._measures[key] = stats
+            elif pol is not None:
+                cached = self._measures[key] = measure_policy(pol)
+            else:
                 raise ValueError("measure miss needs the policy to count")
-            stats = self._measures[key] = measure_policy(pol)
         else:
             self.counters["measure_hits"] += 1
-        return stats
+        return cached
+
+    def timing(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+               underlay, build) -> TimingProfile:
+        """Cached analytic :class:`~repro.core.network.TimingProfile` for one
+        epoch's plan on one underlay. The profile is payload-independent —
+        a payload x codec grid over one plan shares a single profile and
+        only re-evaluates the closed form per wire size. ``underlay`` is the
+        member-masked underlay spec the profile was (or will be) built on;
+        ``build()`` walks the policy on a miss."""
+        key = (policy_key(spec, members),
+               underlay_fingerprint(underlay, spec.n))
+        profile = self._timings.get(key)
+        if profile is None:
+            self.counters["timing_misses"] += 1
+            profile = self._timings[key] = build()
+        else:
+            self.counters["timing_hits"] += 1
+        return profile
 
     def trajectory(self, spec: "ScenarioSpec", build) -> list:
         """Cached membership trajectory: ``(round, moderator, members,
@@ -165,4 +201,5 @@ class PlanCache:
         out["unique_overlays"] = len(self._overlays)
         out["unique_subgraphs"] = len(self._subgraphs)
         out["unique_policies"] = len(self._policies)
+        out["unique_timing_profiles"] = len(self._timings)
         return out

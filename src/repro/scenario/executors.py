@@ -24,7 +24,8 @@ Built-ins (capability flags in parentheses):
 =========  ================================================================
 plan       :func:`repro.core.plan.measure_policy` — vectorized counting,
            the N=1000 sweep scale; batches whole sweep grids in one numpy
-           pass (``counting_only``)
+           pass and fills the timing fields from the analytic network
+           model (``counting_only``, ``provides_timing``)
 engine     :class:`repro.core.gossip.GossipEngine` — runtime FIFO queues
            (``supports_drops``, ``moves_payloads``)
 netsim     :func:`repro.core.netsim.simulate_policy` — contended fluid
@@ -41,9 +42,8 @@ cells).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type, Union
 
 import numpy as np
 
@@ -52,6 +52,7 @@ from ..core.gossip import GossipEngine
 from ..core.graph import Graph
 from ..core.moderator import ConnectivityReport, Moderator
 from ..core.netsim import TestbedSpec, simulate_policy
+from ..core.network import NetworkSpec, TimingProfile, as_network_model
 from ..core.plan import CommPolicy
 from .cache import PlanCache
 from .spec import (
@@ -178,16 +179,18 @@ def _proxy_payloads(spec: ScenarioSpec, members: Sequence[int]) -> List:
     return out
 
 
-def _member_testbed(spec: ScenarioSpec, members: Sequence[int]) -> TestbedSpec:
+def _member_testbed(
+    spec: ScenarioSpec, members: Sequence[int]
+) -> Union[TestbedSpec, NetworkSpec]:
     """The underlay restricted to the healthy members (dense reindexing).
 
     ``phys_n`` follows the *underlay's* declared device count (it may
-    legitimately exceed the overlay), so an explicit TestbedSpec keeps its
-    physical subnet layout under the dense reindexing.
+    legitimately exceed the overlay), so an explicit underlay keeps its
+    physical subnet layout — and, for heterogeneous
+    :class:`~repro.core.network.NetworkSpec` underlays, each device's
+    seeded access rate — under the dense reindexing.
     """
-    base = spec.testbed()
-    return dataclasses.replace(
-        base, n=len(members), node_ids=tuple(members), phys_n=base.n)
+    return spec.testbed().masked(members)
 
 
 def _subgraph_required() -> Graph:
@@ -358,20 +361,43 @@ def capability_table() -> Dict[str, Dict[str, bool]]:
 @register("plan")
 class PlanExecutor(Executor):
     """Vectorized counting path (:func:`measure_policy`) — pure accounting,
-    cached per unique plan, batched across sweep cells in one numpy pass."""
+    cached per unique plan, batched across sweep cells in one numpy pass.
+
+    Since the network-model API this executor also *provides timing*: the
+    analytic bottleneck model (:class:`repro.core.network.TimingProfile`)
+    fills the same round-time / transfer-time / bandwidth fields the fluid
+    simulator measures, within the network module's tolerance contract, at
+    counting speed — profiles are cached per (plan, underlay) and evaluated
+    per wire size, so a whole sweep grid costs one profile walk per unique
+    plan instead of one fluid simulation per cell.
+    """
 
     counting_only = True
+    provides_timing = True
 
     def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
         super().begin_epoch(mod, members)
-        self._stats = self.cache.measure(self.spec, members, self.policy)
+        testbed = _member_testbed(self.spec, members)
+        profile = self.cache.timing(
+            self.spec, members, testbed,
+            lambda: TimingProfile.from_policy(self.policy, testbed))
+        # the timing walk already counted slots/transmissions — seed the
+        # measure cache from it instead of walking the policy a second time
+        self._stats = self.cache.measure(self.spec, members, self.policy,
+                                         stats=profile.measure_stats())
+        self._timing = profile.estimate(self.wire_send_mb)
 
     def run_round(self, rctx: RoundContext) -> RoundReport:
         tx = self._stats["transmissions"]
+        est = self._timing
         return rctx.report(
             n_slots=self._stats["n_slots"], transmissions=tx,
             bytes_mb=tx * self.payload_mb * self.policy.payload_fraction,
-            bytes_on_wire_mb=tx * self.wire_send_mb)
+            bytes_on_wire_mb=tx * self.wire_send_mb,
+            total_time_s=est.total_time_s,
+            mean_transfer_s=est.mean_transfer_s,
+            mean_bandwidth_mbps=est.mean_bandwidth_mbps,
+            max_concurrency=est.max_concurrency)
 
     def run_cells(self, cells, plan_cache: Optional[PlanCache] = None,
                   record_trace: bool = False) -> List[ScenarioResult]:
@@ -381,7 +407,8 @@ class PlanExecutor(Executor):
         """
         cache = plan_cache if plan_cache is not None else PlanCache()
         wire_memo: Dict[Tuple[str, float, float], float] = {}
-        rows: List[Tuple] = []  # (cell_idx, rctx, n_slots, tx, frac, wire_mb)
+        est_memo: Dict[Tuple[int, float], Any] = {}
+        rows: List[Tuple] = []  # (cell_idx, rctx, n_slots, tx, frac, wire, est)
         cell_meta: List[Tuple[ScenarioSpec, float]] = []
         for ci, cell in enumerate(cells):
             spec = cell.spec
@@ -405,16 +432,30 @@ class PlanExecutor(Executor):
             for r, moderator, members, applied in cache.trajectory(
                     spec, build_trajectory):
                 pol = cache.policy(spec, members, _subgraph_required)
-                stats = cache.measure(spec, members, pol)
                 wire_key = (spec.codec, payload_mb, pol.payload_fraction)
                 wire_mb = wire_memo.get(wire_key)
                 if wire_mb is None:
                     wire_mb = wire_memo[wire_key] = per_send_wire_mb(
                         codec, payload_mb, pol.payload_fraction)
+                # analytic timing: one profile per unique (plan, underlay),
+                # one evaluation per unique (profile, wire size) — the grid
+                # pays for a handful of vectorized formula passes instead of
+                # a fluid simulation per cell. The profile walk doubles as
+                # the counting pass (measure seeded from measure_stats).
+                testbed = _member_testbed(spec, members)
+                profile = cache.timing(
+                    spec, members, testbed,
+                    lambda: TimingProfile.from_policy(pol, testbed))
+                stats = cache.measure(spec, members, pol,
+                                      stats=profile.measure_stats())
+                est_key = (id(profile), wire_mb)
+                est = est_memo.get(est_key)
+                if est is None:
+                    est = est_memo[est_key] = profile.estimate(wire_mb)
                 rows.append((ci, RoundContext(r, moderator, members, applied,
                                               spec),
                              stats["n_slots"], stats["transmissions"],
-                             pol.payload_fraction, wire_mb))
+                             pol.payload_fraction, wire_mb, est))
         # the vectorized pass: per-row byte accounting for the whole grid at
         # once (same operand order as run_round, so results are bit-identical)
         tx = np.array([row[3] for row in rows], dtype=np.float64)
@@ -425,11 +466,15 @@ class PlanExecutor(Executor):
         bytes_mb = (tx * payload) * frac
         bytes_on_wire = tx * wire
         per_cell: List[List[RoundReport]] = [[] for _ in cells]
-        for i, (ci, rctx, n_slots, tx_i, _frac, _wire) in enumerate(rows):
+        for i, (ci, rctx, n_slots, tx_i, _frac, _wire, est) in enumerate(rows):
             per_cell[ci].append(rctx.report(
                 n_slots=n_slots, transmissions=tx_i,
                 bytes_mb=float(bytes_mb[i]),
-                bytes_on_wire_mb=float(bytes_on_wire[i])))
+                bytes_on_wire_mb=float(bytes_on_wire[i]),
+                total_time_s=est.total_time_s,
+                mean_transfer_s=est.mean_transfer_s,
+                mean_bandwidth_mbps=est.mean_bandwidth_mbps,
+                max_concurrency=est.max_concurrency))
         return [ScenarioResult(
             scenario=spec.name, executor=self.name, protocol=spec.protocol,
             payload_mb=payload_mb, rounds=reps, spec=spec.to_dict())
@@ -485,7 +530,10 @@ class NetsimExecutor(Executor):
     def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
         super().begin_epoch(mod, members)
         self._stats = self.cache.measure(self.spec, members, self.policy)
-        self._testbed = _member_testbed(self.spec, members)
+        # compile the member-masked underlay once per membership epoch —
+        # simulate_policy passes a CompiledNetwork through unchanged
+        self._testbed = as_network_model(
+            _member_testbed(self.spec, members))
 
     def run_round(self, rctx: RoundContext) -> RoundReport:
         sim = simulate_policy(self.policy, self._testbed, self.payload_mb,

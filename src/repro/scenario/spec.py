@@ -11,9 +11,12 @@ A :class:`ScenarioSpec` declares the whole experiment once:
 
 * **overlay** — a :class:`repro.core.graph.TopologySpec` (generated topology
   with subnet-aware costs) or an explicit cost matrix;
-* **underlay** — a :class:`repro.core.netsim.TestbedSpec`; when omitted it is
-  *derived from* the overlay's subnet/cost structure
-  (:meth:`TestbedSpec.from_overlay`), so the two can never disagree;
+* **underlay** — a :class:`repro.core.network.NetworkSpec` (arbitrary router
+  fabrics, heterogeneous access rates), a named preset (``"paper_lan"``,
+  ``"wan"``, ``"edge"``, ``"congested"``), or a legacy
+  :class:`repro.core.netsim.TestbedSpec`; when omitted it is *derived from*
+  the overlay's subnet/cost structure (:meth:`TestbedSpec.from_overlay`),
+  so the two can never disagree;
 * **protocol** — a name from :func:`repro.core.plan.make_policy` plus
   ``n_segments`` for segmented gossip;
 * **payload** — model size in MB, a paper payload code/name (Table II,
@@ -40,6 +43,7 @@ import numpy as np
 from ..compress import CODEC_NAMES, Codec, make_codec
 from ..core.graph import Graph, TopologySpec, make_topology
 from ..core.netsim import SimResult, TestbedSpec
+from ..core.network import NETWORK_PRESETS, NetworkSpec, get_preset
 
 # Protocol names a scenario may declare (everything make_policy knows).
 SCENARIO_PROTOCOLS = (
@@ -143,7 +147,11 @@ class ScenarioSpec:
     codec: str = "fp32"
     rounds: int = 1
     churn: Tuple[ChurnEvent, ...] = ()
-    underlay: Optional[TestbedSpec] = None  # None = derived from the overlay
+    # Physical underlay: a TestbedSpec (legacy), a declarative
+    # repro.core.network.NetworkSpec, or a preset name ("paper_lan" | "wan"
+    # | "edge" | "congested", sized to the overlay's n). None = derived
+    # from the overlay's subnet/cost structure.
+    underlay: Optional[Union[TestbedSpec, NetworkSpec, str]] = None
     drop_rate: float = 0.0  # transient link-failure probability per transfer
     drop_seed: int = 0
     mst_algorithm: str = "prim"
@@ -166,9 +174,13 @@ class ScenarioSpec:
             return make_topology(self.overlay)
         return Graph(np.asarray(self.overlay, dtype=np.float64))
 
-    def testbed(self) -> TestbedSpec:
-        """The physical underlay: explicit, or derived from the overlay so
-        subnet layout and cost model are a single source of truth."""
+    def testbed(self) -> Union[TestbedSpec, NetworkSpec]:
+        """The physical underlay spec: explicit (TestbedSpec or NetworkSpec),
+        a resolved preset name sized to the overlay, or — when omitted —
+        derived from the overlay so subnet layout and cost model are a
+        single source of truth."""
+        if isinstance(self.underlay, str):
+            return get_preset(self.underlay, self.n)
         if self.underlay is not None:
             return self.underlay
         if isinstance(self.overlay, TopologySpec):
@@ -205,6 +217,12 @@ class ScenarioSpec:
         except ValueError:
             raise ValueError(
                 f"unknown codec {self.codec!r}; known: {CODEC_NAMES}") from None
+        if isinstance(self.underlay, str) and self.underlay not in NETWORK_PRESETS:
+            raise ValueError(
+                f"unknown network preset {self.underlay!r}; known: "
+                f"{sorted(NETWORK_PRESETS)}")
+        if isinstance(self.underlay, NetworkSpec):
+            self.underlay.validate()
         n = self.n
         for ev in self.churn:
             if ev.action not in CHURN_ACTIONS:
@@ -219,15 +237,27 @@ class ScenarioSpec:
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         if isinstance(self.overlay, TopologySpec):
-            overlay: Any = {"type": "TopologySpec", **dataclasses.asdict(self.overlay)}
+            # flat getattr rather than dataclasses.asdict: TopologySpec has
+            # no nested dataclasses, and asdict's deepcopy recursion is
+            # measurable at sweep-grid scale (one to_dict per cell)
+            overlay: Any = {"type": "TopologySpec",
+                            **{f: getattr(self.overlay, f)
+                               for f in self.overlay.__dataclass_fields__}}
         else:
             overlay = {"type": "cost_matrix",
                        "adj": np.asarray(self.overlay).tolist()}
+        if self.underlay is None:
+            underlay: Any = None
+        elif isinstance(self.underlay, str):
+            underlay = self.underlay
+        elif isinstance(self.underlay, NetworkSpec):
+            underlay = self.underlay.to_dict()
+        else:
+            underlay = dataclasses.asdict(self.underlay)
         return {
             "name": self.name,
             "overlay": overlay,
-            "underlay": (None if self.underlay is None
-                         else dataclasses.asdict(self.underlay)),
+            "underlay": underlay,
             "protocol": self.protocol,
             "n_segments": self.n_segments,
             "payload": self.payload,

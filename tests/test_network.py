@@ -1,0 +1,408 @@
+"""Network-model API: routing, presets, heterogeneity, analytic timing.
+
+Pins the three contracts of :mod:`repro.core.network`:
+
+* **back-compat** — the default :class:`TestbedSpec` (3 subnets, full
+  router mesh) routes and times byte-identically to the historical
+  hardcoded 0-or-2-hop rule;
+* **pluggability** — router fabrics (mesh/line/star/explicit) route over
+  shortest paths, per-node heterogeneity is seeded and churn-stable, and
+  presets/NetworkSpec/TestbedSpec are interchangeable everywhere an
+  underlay is accepted;
+* **timing tolerance** — the ``plan`` executor's analytic round times stay
+  within ±15% of the fluid simulator on every netsim-capable registry
+  scenario (the acceptance bound of the network-model redesign).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.graph import TopologySpec, make_topology, slot_length_for_colors
+from repro.core.netsim import TestbedSpec, simulate_policy
+from repro.core.network import (
+    NETWORK_PRESETS,
+    CompiledNetwork,
+    NetworkSpec,
+    TimingProfile,
+    as_compiled_network,
+    as_network_model,
+    estimate_timing,
+    get_preset,
+    router_graph_edges,
+    slot_length_for_network,
+    underlay_fingerprint,
+)
+from repro.core.plan import compile_policy, make_policy
+from repro.scenario import run_scenario, run_sweep, scenarios
+from repro.scenario.cache import PlanCache
+from repro.scenario.spec import ScenarioSpec
+from repro.scenario.sweep import SweepSpec
+
+
+def legacy_links(spec: TestbedSpec, src: int, dst: int):
+    """The pre-network-API hardcoded routing rule (the back-compat oracle)."""
+    s, d = spec.subnet(src), spec.subnet(dst)
+    links = [("access-up", src, -1)]
+    if s != d:
+        links.append(("trunk", min(s, d), max(s, d)))
+    links.append(("access-down", dst, -1))
+    return links
+
+
+def legacy_latency(spec: TestbedSpec, src: int, dst: int) -> float:
+    hops = 0 if spec.subnet(src) == spec.subnet(dst) else 2
+    return spec.base_latency_s + hops * spec.hop_latency_s
+
+
+class TestTestbedBackCompat:
+    @pytest.mark.parametrize("n,n_subnets", [(10, 3), (12, 4), (7, 2), (6, 1)])
+    def test_routing_byte_identical_to_hardcoded_rule(self, n, n_subnets):
+        spec = TestbedSpec(n=n, n_subnets=n_subnets)
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                assert spec.links_for(s, d) == legacy_links(spec, s, d)
+                assert spec.latency(s, d) == legacy_latency(spec, s, d)
+                for link in spec.links_for(s, d):
+                    expect = (spec.trunk_mbps if link[0] == "trunk"
+                              else spec.access_mbps)
+                    assert spec.capacity(link) == expect
+
+    def test_masked_testbed_keeps_physical_routing(self):
+        base = TestbedSpec(n=10)
+        masked = dataclasses.replace(base, n=4, node_ids=(0, 3, 7, 9),
+                                     phys_n=10)
+        # dense index 1 is physical node 3 (subnet 0); index 2 is node 7
+        # (subnet 2) — the route must cross the (0, 2) trunk
+        assert masked.subnet(1) == 0 and masked.subnet(2) == 2
+        assert ("trunk", 0, 2) in masked.links_for(1, 2)
+        assert masked.latency(1, 2) == legacy_latency(masked, 1, 2)
+
+    def test_to_network_round_trip(self):
+        spec = TestbedSpec(n=8, n_subnets=2, access_mbps=20.0)
+        net = spec.to_network().build()
+        for s in range(8):
+            for d in range(8):
+                if s == d:
+                    continue
+                assert net.links_for(s, d) == spec.links_for(s, d)
+                assert net.latency(s, d) == spec.latency(s, d)
+
+    def test_underlay_smaller_than_overlay_still_runs(self):
+        """Historical behaviour: an explicit underlay declaring fewer
+        devices than the overlay maps trailing nodes onto extra subnets
+        (subnet_of is monotone past n_subnets-1) and the mesh fabric
+        extends to cover them — both executors must accept it."""
+        spec = ScenarioSpec(
+            overlay=TopologySpec(kind="erdos_renyi", n=12, seed=3),
+            underlay=TestbedSpec(n=10), payload=5.0)
+        fluid = run_scenario(spec, executor="netsim")
+        analytic = run_scenario(spec, executor="plan")
+        assert fluid.total_time_s > 0
+        ratio = analytic.total_time_s / fluid.total_time_s
+        assert TOL_LO < ratio < TOL_HI
+        net_spec = ScenarioSpec(
+            overlay=TopologySpec(kind="erdos_renyi", n=12, seed=3),
+            underlay=NetworkSpec(n=10, access_range=(3.0, 16.0)), payload=5.0)
+        assert run_scenario(net_spec, executor="netsim").total_time_s > 0
+
+    def test_fluid_sim_accepts_every_underlay_form(self):
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=3))
+        ref = simulate_policy(make_policy("mosgu_exchange", g),
+                              TestbedSpec(n=10), 14.0)
+        for spec in (NetworkSpec(n=10), NetworkSpec(n=10).build(),
+                     "paper_lan"):
+            res = simulate_policy(make_policy("mosgu_exchange", g), spec, 14.0)
+            assert res.total_time_s == pytest.approx(ref.total_time_s)
+
+
+class TestRouterFabrics:
+    def test_named_fabric_shapes(self):
+        assert router_graph_edges("mesh", 3) == ((0, 1), (0, 2), (1, 2))
+        assert router_graph_edges("line", 4) == ((0, 1), (1, 2), (2, 3))
+        assert router_graph_edges("star", 4) == ((0, 1), (0, 2), (0, 3))
+
+    def test_line_fabric_multi_trunk_route(self):
+        net = NetworkSpec(n=12, n_subnets=4, router_kind="line").build()
+        # node 0 (subnet 0) -> node 11 (subnet 3): three chained trunks
+        assert net.links_for(0, 11) == [
+            ("access-up", 0, -1), ("trunk", 0, 1), ("trunk", 1, 2),
+            ("trunk", 2, 3), ("access-down", 11, -1)]
+        # hop rule generalizes the paper's 0-or-2: trunks + 1 when routed
+        assert net.latency(0, 11) == pytest.approx(
+            net.spec.base_latency_s + 4 * net.spec.hop_latency_s)
+        assert net.latency(0, 1) == pytest.approx(net.spec.base_latency_s)
+
+    def test_star_fabric_routes_via_hub(self):
+        net = NetworkSpec(n=12, n_subnets=4, router_kind="star").build()
+        # subnet 1 -> subnet 3 crosses both hub trunks
+        assert net.links_for(3, 11) == [
+            ("access-up", 3, -1), ("trunk", 0, 1), ("trunk", 0, 3),
+            ("access-down", 11, -1)]
+        # hub-adjacent pairs use a single trunk
+        assert net.links_for(0, 11) == [
+            ("access-up", 0, -1), ("trunk", 0, 3), ("access-down", 11, -1)]
+
+    def test_explicit_router_edges(self):
+        net = NetworkSpec(n=9, n_subnets=3,
+                          router_edges=((2, 0), (1, 2))).build()
+        # edges normalize to (low, high); 0 -> 1 must route through 2
+        assert net.trunk_edges == ((0, 2), (1, 2))
+        assert [l for l in net.links_for(0, 8) if l[0] == "trunk"] == [
+            ("trunk", 0, 2)]
+        assert [l for l in net.links_for(0, 4) if l[0] == "trunk"] == [
+            ("trunk", 0, 2), ("trunk", 1, 2)]
+
+    def test_disconnected_router_graph_rejected_at_build(self):
+        """A fabric that strands a subnet must fail at compile time, before
+        either executor could route around it — the netsim and plan
+        executors must never disagree about reachability."""
+        with pytest.raises(ValueError, match="disconnect"):
+            NetworkSpec(n=9, n_subnets=3, router_edges=((0, 1),)).build()
+        spec = ScenarioSpec(underlay=NetworkSpec(
+            n=10, n_subnets=3, router_edges=((0, 1),)))
+        for executor in ("plan", "netsim"):
+            with pytest.raises(ValueError, match="disconnect"):
+                run_scenario(spec, executor=executor)
+
+    def test_unknown_router_kind_rejected(self):
+        with pytest.raises(ValueError, match="router_kind"):
+            NetworkSpec(n=6, router_kind="torus").validate()
+
+    def test_out_of_range_router_edges_rejected(self):
+        with pytest.raises(ValueError, match="router_edges"):
+            NetworkSpec(n=9, n_subnets=3, router_edges=((0, 5),)).validate()
+
+    def test_preset_timing_sized_to_plan(self):
+        """Preset names passed straight to the timing model must size the
+        network to the plan's node count, not the preset default of 10."""
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=20, seed=1))
+        est = estimate_timing(make_policy("mosgu_exchange", g), "wan", 21.2e6)
+        assert est.n_transfers > 0 and est.total_time_s > 0
+        ref = estimate_timing(make_policy("mosgu_exchange", g),
+                              get_preset("wan", 20), 21.2e6)
+        assert est.total_time_s == pytest.approx(ref.total_time_s)
+
+    def test_longer_routes_slow_the_round(self):
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=12, seed=3,
+                                       n_subnets=4))
+        times = {}
+        for kind in ("mesh", "line"):
+            net = NetworkSpec(n=12, n_subnets=4, router_kind=kind).build()
+            times[kind] = simulate_policy(
+                make_policy("mosgu", g), net, 21.2).total_time_s
+        assert times["line"] > times["mesh"]
+
+
+class TestHeterogeneity:
+    def test_seeded_rates_deterministic(self):
+        a = NetworkSpec(n=10, access_range=(3.0, 16.0), het_seed=1).build()
+        b = NetworkSpec(n=10, access_range=(3.0, 16.0), het_seed=1).build()
+        c = NetworkSpec(n=10, access_range=(3.0, 16.0), het_seed=2).build()
+        assert np.array_equal(a.access_rate, b.access_rate)
+        assert not np.array_equal(a.access_rate, c.access_rate)
+        assert ((a.access_rate >= 3.0) & (a.access_rate <= 16.0)).all()
+
+    def test_masking_keeps_physical_rates(self):
+        full = NetworkSpec(n=10, access_range=(3.0, 16.0)).build()
+        members = (0, 3, 7, 9)
+        masked = NetworkSpec(n=10, access_range=(3.0, 16.0)) \
+            .masked(members).build()
+        assert np.array_equal(masked.access_rate,
+                              full.access_rate[list(members)])
+        # capacity() reads the dense node's physical rate
+        assert masked.capacity(("access-up", 2, -1)) == full.access_rate[7]
+
+    def test_uniform_when_no_range(self):
+        net = NetworkSpec(n=6, access_mbps=17.0).build()
+        assert np.array_equal(net.access_rate, np.full(6, 17.0))
+
+    def test_slow_node_bounds_the_round(self):
+        """A heterogeneous underlay with one very slow device must yield a
+        longer fluid round than the uniform one at the same mean."""
+        g = make_topology(TopologySpec(kind="complete", n=6, seed=0))
+        pol = lambda: make_policy("mosgu_exchange", g)  # noqa: E731
+        uniform = simulate_policy(pol(), NetworkSpec(n=6, access_mbps=12.0),
+                                  21.2)
+        slow = simulate_policy(
+            pol(), NetworkSpec(n=6, access_range=(1.0, 1.0), het_seed=0),
+            21.2)
+        assert slow.total_time_s > uniform.total_time_s
+
+
+class TestPresets:
+    def test_registry_contents(self):
+        assert {"paper_lan", "wan", "edge", "congested"} <= set(NETWORK_PRESETS)
+
+    def test_preset_sized_to_n(self):
+        assert get_preset("wan", 16).n == 16
+        with pytest.raises(ValueError, match="unknown network preset"):
+            get_preset("dialup")
+
+    def test_paper_lan_is_the_testbed(self):
+        lan = get_preset("paper_lan", 10).build()
+        ref = TestbedSpec(n=10)
+        for s, d in ((0, 1), (0, 5), (0, 9), (4, 6)):
+            assert lan.links_for(s, d) == ref.links_for(s, d)
+            assert lan.latency(s, d) == ref.latency(s, d)
+
+    def test_scenario_accepts_preset_name(self):
+        spec = ScenarioSpec(underlay="wan").validate()
+        testbed = spec.testbed()
+        assert isinstance(testbed, NetworkSpec)
+        assert testbed.name == "wan" and testbed.n == spec.n
+        with pytest.raises(ValueError, match="unknown network preset"):
+            ScenarioSpec(underlay="dialup").validate()
+
+    def test_scenario_serializes_underlays(self):
+        assert ScenarioSpec(underlay="edge").to_dict()["underlay"] == "edge"
+        d = ScenarioSpec(underlay=NetworkSpec(n=10)).to_dict()["underlay"]
+        assert d["type"] == "NetworkSpec" and d["n"] == 10
+
+    def test_as_network_model_forms(self):
+        for form in ("edge", get_preset("edge", 10), get_preset("edge", 10).build()):
+            assert isinstance(as_compiled_network(form, 10), CompiledNetwork)
+        with pytest.raises(TypeError):
+            as_network_model(42)
+
+
+# the ±15% acceptance bound of the analytic timing model
+TOL_LO, TOL_HI = 0.85, 1.15
+
+
+def netsim_capable_registry():
+    return [name for name in scenarios.names()
+            if "netsim" in scenarios.get(name).executors]
+
+
+class TestAnalyticTiming:
+    @pytest.mark.parametrize("name", netsim_capable_registry())
+    def test_plan_within_15pct_of_fluid_on_registry(self, name):
+        """The acceptance bound: the plan executor's analytic round times
+        track the fluid simulator on every netsim-capable registry scenario
+        (per round — membership epochs under churn included)."""
+        spec = scenarios.get(name)
+        analytic = run_scenario(spec, executor="plan")
+        fluid = run_scenario(spec, executor="netsim")
+        for ra, rf in zip(analytic.rounds, fluid.rounds):
+            assert ra.total_time_s is not None
+            ratio = ra.total_time_s / rf.total_time_s
+            assert TOL_LO < ratio < TOL_HI, (name, ra.round, ratio)
+
+    def test_plan_executor_provides_timing(self):
+        from repro.scenario import executors
+
+        caps = executors.capability_table()
+        assert caps["plan"]["provides_timing"]
+        res = run_scenario(scenarios.get("paper_table3"), executor="plan")
+        r = res.rounds[0]
+        assert r.total_time_s > 0 and r.mean_transfer_s > 0
+        assert r.mean_bandwidth_mbps > 0 and r.max_concurrency > 0
+
+    def test_estimate_timing_plan_and_policy_agree(self):
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=3))
+        spec = TestbedSpec(n=10)
+        size = 21.2e6
+        by_policy = estimate_timing(make_policy("mosgu", g), spec, size)
+        by_plan = estimate_timing(compile_policy(make_policy("mosgu", g)),
+                                  spec, size)
+        assert by_policy.total_time_s == pytest.approx(by_plan.total_time_s)
+        assert by_policy.n_transfers == by_plan.n_transfers == 90
+
+    def test_broadcast_exchange_exact(self):
+        """All-at-once equal flows on a shared bottleneck: the closed form
+        is exact, not just within tolerance."""
+        g = make_topology(TopologySpec(kind="complete", n=10, seed=3))
+        spec = TestbedSpec(n=10)
+        sim = simulate_policy(make_policy("broadcast_exchange", g), spec, 21.2)
+        est = estimate_timing(make_policy("broadcast_exchange", g), spec,
+                              21.2e6)
+        assert est.total_time_s == pytest.approx(sim.total_time_s, rel=1e-3)
+
+    def test_monotone_in_payload_and_underlay(self):
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=3))
+        prof_lan = TimingProfile.from_policy(make_policy("mosgu", g),
+                                             "paper_lan")
+        prof_wan = TimingProfile.from_policy(make_policy("mosgu", g), "wan")
+        t = [prof_lan.estimate(s).total_time_s for s in (9.8, 21.2, 49.0)]
+        assert t[0] < t[1] < t[2]
+        for s in (9.8, 21.2, 49.0):
+            assert (prof_wan.estimate(s).total_time_s
+                    > prof_lan.estimate(s).total_time_s)
+
+    def test_profile_cached_across_payload_cells(self):
+        """A payload grid over one plan builds exactly one timing profile."""
+        cache = PlanCache()
+        sweep = SweepSpec(
+            base=ScenarioSpec(
+                overlay=TopologySpec(kind="erdos_renyi", n=8, seed=1),
+                protocol="mosgu", rounds=1),
+            grid={"payload": (5.0, 10.0, 20.0, 40.0)})
+        run_sweep(sweep, executor="plan", plan_cache=cache)
+        stats = cache.stats()
+        assert stats["timing_misses"] == 1
+        assert stats["timing_hits"] == 3
+        assert stats["unique_timing_profiles"] == 1
+
+    def test_underlay_axis_invalidates_profile_cache(self):
+        """Different underlays cannot share timing profiles."""
+        cache = PlanCache()
+        sweep = SweepSpec(
+            base=ScenarioSpec(
+                overlay=TopologySpec(kind="erdos_renyi", n=8, seed=1),
+                protocol="mosgu", rounds=1),
+            grid={"underlay": ("paper_lan", "wan", "edge")})
+        res = run_sweep(sweep, executor="plan", plan_cache=cache)
+        assert cache.stats()["unique_timing_profiles"] == 3
+        times = [c.result.total_time_s for c in res.cells]
+        assert len(set(times)) == 3
+
+    def test_wan_sweep_registered(self):
+        sweep = scenarios.get_sweep("wan_sweep")
+        assert sweep.n_cells == 12
+        assert "underlay" in sweep.axes()
+
+    def test_sweep_timing_identical_to_serial(self):
+        """The batched run_cells timing path must equal per-cell
+        run_scenario bit-for-bit (the sweep API's cell contract)."""
+        sweep = scenarios.get_sweep("wan_sweep")
+        swept = run_sweep(sweep, executor="plan")
+        for cell in swept.cells:
+            serial = run_scenario(cell.spec, executor="plan")
+            assert serial.to_dict() == cell.result.to_dict(), cell.coords
+
+    def test_slot_length_for_network(self):
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=10, seed=3))
+        from repro.core.graph import build_mst, color_graph
+
+        mst = build_mst(g)
+        colors = color_graph(mst)
+        slot = slot_length_for_network(mst, colors, TestbedSpec(n=10), 21.2)
+        assert slot > 0
+        # the graph-layer hook routes to the same computation
+        assert slot_length_for_colors(
+            mst, colors, 21.2, network=TestbedSpec(n=10)) == slot
+        # a bigger model needs a longer slot
+        assert slot_length_for_network(
+            mst, colors, TestbedSpec(n=10), 49.0) > slot
+
+
+class TestFingerprints:
+    def test_underlay_fingerprints_distinguish(self):
+        fps = {
+            underlay_fingerprint("wan", 10),
+            underlay_fingerprint("wan", 12),
+            underlay_fingerprint(NetworkSpec(n=10)),
+            underlay_fingerprint(NetworkSpec(n=10, trunk_mbps=8.0)),
+            underlay_fingerprint(TestbedSpec(n=10)),
+            underlay_fingerprint(TestbedSpec(n=10, access_mbps=24.0)),
+        }
+        assert len(fps) == 6
+
+    def test_equal_specs_share_fingerprints(self):
+        assert (underlay_fingerprint(NetworkSpec(n=10))
+                == underlay_fingerprint(NetworkSpec(n=10)))
+        assert (underlay_fingerprint(TestbedSpec(n=10))
+                == underlay_fingerprint(TestbedSpec(n=10)))
