@@ -1,19 +1,34 @@
-"""Paper III-C algorithm selection: BFS vs DSatur vs Welsh-Powell/LDF.
+"""Paper III-C algorithm selection: BFS vs DSatur vs Welsh-Powell/LDF,
+extended with Jones–Plassmann and a sparse-input section.
 
 The paper argues BFS is optimal for MSTs (always 2 colors, O(V+E)); DSatur
 may use fewer colors on general graphs at higher cost. Measured here on MSTs
-and on the raw overlay graphs.
+and on the raw overlay graphs. The paper's comparison stops at n=1000 —
+the dense algorithms are per-edge Python loops — so the sparse section
+re-runs the CSR-capable algorithms (BFS, greedy, Jones–Plassmann) on k-NN
+and power-law overlays past that, with color-count and wall-clock columns
+from the same CSV row format.
 """
 from __future__ import annotations
 
 import time
 
 from repro.core.graph import (
-    TopologySpec, build_mst, color_bfs, color_dsatur, color_welsh_powell,
-    is_proper_coloring, make_topology,
+    TopologySpec, build_mst, color_bfs, color_dsatur, color_graph,
+    color_jones_plassmann_dense, color_welsh_powell, is_proper_coloring,
+    make_topology,
 )
 
-ALGOS = {"bfs": color_bfs, "dsatur": color_dsatur, "welsh_powell": color_welsh_powell}
+ALGOS = {
+    "bfs": color_bfs,
+    "dsatur": color_dsatur,
+    "welsh_powell": color_welsh_powell,
+    "jones_plassmann": color_jones_plassmann_dense,
+}
+
+# CSR-capable algorithms x sparse overlay kinds, past the paper's n=1000
+SPARSE_ALGOS = ("bfs", "greedy", "jones_plassmann")
+SPARSE_CASES = (("knn", 2000), ("knn", 5000), ("power_law", 5000))
 
 
 def run(csv_rows):
@@ -30,3 +45,17 @@ def run(csv_rows):
                 n_colors = len(set(int(c) for c in colors))
                 csv_rows.append(
                     (f"coloring/{kind}/{label}/{name}", us, f"{n_colors}colors"))
+
+    for kind, n in SPARSE_CASES:
+        g = make_topology(TopologySpec(kind=kind, n=n, seed=1, k=8))
+        mst = build_mst(g)
+        for name in SPARSE_ALGOS:
+            for label, graph in (("mst", mst), ("overlay", g)):
+                t0 = time.time()
+                for _ in range(3):
+                    colors = color_graph(graph, name)
+                us = (time.time() - t0) / 3 * 1e6
+                assert is_proper_coloring(graph, colors)
+                n_colors = len(set(int(c) for c in colors))
+                csv_rows.append((f"coloring/{kind}{n}/{label}/{name}",
+                                 us, f"{n_colors}colors"))

@@ -1,5 +1,6 @@
 """§Perf hillclimbs: hypothesis -> change -> re-lower -> measure, for the
-three selected (arch × shape) pairs.
+three selected (arch × shape) pairs — plus the ``overlay`` membership
+hillclimb over the sparse planner.
 
 Run AFTER the baseline sweep:
     PYTHONPATH=src python -m benchmarks.hillclimb [pair]
@@ -12,9 +13,14 @@ Pairs:
             collective-bound (fp32 master gossip dominates the wire).
   arctic  — arctic-480b × train_4k × 2x16x16: most collective-bound
             (expert-parallel all-to-all + inter-pod gossip over DCN).
+  overlay — greedy membership descent on a k-NN overlay: per round, score
+            every candidate single-member eviction by MST cost and keep the
+            best. Candidates used to cost a full plan rebuild each; they now
+            go through SparsePlanner.replan, and the output reports the
+            measured per-edit speedup against timed full-rebuild references.
 
-Each variant is a full re-lower + re-compile + roofline extraction; results
-accumulate in experiments/perf/<pair>.json for EXPERIMENTS.md §Perf.
+Each arch variant is a full re-lower + re-compile + roofline extraction;
+results accumulate in experiments/perf/<pair>.json for EXPERIMENTS.md §Perf.
 """
 import os
 
@@ -22,8 +28,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import json
 import sys
-
-from repro.launch.dryrun import dryrun_pair
+import time
 
 OUT = "experiments/perf"
 
@@ -95,7 +100,87 @@ HILLCLIMBS = {
 }
 
 
+def run_overlay(n: int = 2000, rounds: int = 4, pool: int = 32,
+                timed_refs: int = 4, seed: int = 0) -> dict:
+    """Greedy membership hillclimb through the incremental replanner.
+
+    Each round scores ``pool`` candidate single-member evictions (keeping
+    the member subgraph connected) by replanned MST cost and commits the
+    best one. ``timed_refs`` candidates per round are also rebuilt from
+    scratch to measure the per-edit speedup the replanner buys; the
+    rebuild result double-checks ``plan_equal`` on the way.
+    """
+    import numpy as np
+
+    from repro.core.graph import TopologySpec, make_topology
+    from repro.core.replan import SparsePlanner, plan_equal
+
+    g = make_topology(TopologySpec(kind="knn", n=n, seed=seed, k=8,
+                                   n_subnets=max(1, n // 100)))
+    planner = SparsePlanner(g, seed=seed)
+    members = list(range(n))
+    plan = planner.plan(members)
+    rng = np.random.default_rng(seed)
+    replan_s = full_s = 0.0
+    n_edits = n_refs = 0
+    trail = []
+    for r in range(rounds):
+        cands = rng.choice(plan.members, size=min(pool, len(members) - 2),
+                           replace=False)
+        best = None
+        ref_picks = set(int(x) for x in cands[:timed_refs])
+        for v in cands:
+            v = int(v)
+            trial = [m for m in members if m != v]
+            t0 = time.time()
+            try:
+                cand_plan = planner.replan(plan, trial)
+            except ValueError:
+                continue  # eviction disconnects the overlay: not a move
+            replan_s += time.time() - t0
+            n_edits += 1
+            if v in ref_picks:
+                t0 = time.time()
+                ref = planner.plan(trial)
+                full_s += time.time() - t0
+                n_refs += 1
+                assert plan_equal(cand_plan, ref)
+            if best is None or cand_plan.tree_cost() < best[1].tree_cost():
+                best = (v, cand_plan)
+        if best is None:
+            break
+        members = [m for m in members if m != best[0]]
+        plan = best[1]
+        trail.append({"round": r, "evicted": best[0],
+                      "tree_cost": round(plan.tree_cost(), 3)})
+        print(f"[overlay] round {r}: evicted {best[0]}, "
+              f"tree cost {plan.tree_cost():.3f}")
+    per_edit_replan = replan_s / max(1, n_edits)
+    per_edit_full = full_s / max(1, n_refs)
+    speedup = per_edit_full / per_edit_replan if per_edit_replan else 0.0
+    result = {
+        "n": n, "rounds": len(trail), "candidates_scored": n_edits,
+        "full_rebuild_refs": n_refs,
+        "per_edit_replan_ms": round(per_edit_replan * 1e3, 3),
+        "per_edit_full_ms": round(per_edit_full * 1e3, 3),
+        "per_edit_speedup": round(speedup, 1),
+        "trail": trail,
+    }
+    print(f"[overlay] per-edit replan {result['per_edit_replan_ms']}ms vs "
+          f"full rebuild {result['per_edit_full_ms']}ms: "
+          f"{result['per_edit_speedup']}x")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "overlay.json"), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
 def run_pair(name: str) -> None:
+    if name == "overlay":
+        run_overlay()
+        return
+    from repro.launch.dryrun import dryrun_pair
+
     spec = HILLCLIMBS[name]
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, f"{name}.json")
@@ -120,7 +205,7 @@ def run_pair(name: str) -> None:
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(HILLCLIMBS)
+    names = sys.argv[1:] or list(HILLCLIMBS) + ["overlay"]
     for n in names:
         run_pair(n)
 

@@ -1,0 +1,162 @@
+"""Sparse-planner acceptance bench: CSR vs dense plan builds, incremental
+churn replanning, and the `scale_100k` registry scenario.
+
+Standalone usage (CI perf trajectory):
+
+  PYTHONPATH=src python benchmarks/planner_bench.py [--smoke]
+
+writes ``BENCH_planner.json`` with three sections:
+
+* ``build`` — moderator plan-build time (MST + coloring) per overlay size,
+  dense legacy pipeline (densified matrix -> ``mst_prim`` -> ``color_bfs``)
+  vs the CSR fast path (vectorized Borůvka -> Jones–Plassmann). The n=10k
+  row carries the acceptance floor: CSR must be >= 20x faster, enforced with
+  a non-zero exit so CI fails loudly (the ``sweep_bench`` precedent).
+* ``replan`` — a churn delta (leaves + joins) on the n=10k overlay, patched
+  by :class:`repro.core.replan.SparsePlanner.replan` vs rebuilt from
+  scratch. Floor: >= 5x faster while ``plan_equal`` to the rebuild.
+* ``scale_100k`` — the registry scenario end-to-end on the plan executor
+  (two rounds, churn at round 1 through the incremental replanner), with
+  the :class:`~repro.scenario.cache.PlanCache` replan counters recorded.
+  Without ``--smoke`` a counting-only ``scale_1m`` round rides along.
+
+``--smoke`` trims the build curve to its floor row (n=10k stays — the floor
+is the point of the smoke) and skips the million-node row.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.graph import (
+    TopologySpec,
+    build_mst,
+    color_graph,
+    make_topology,
+)
+from repro.core.replan import SparsePlanner, plan_equal
+from repro.scenario import run_scenario, scenarios
+from repro.scenario.cache import PlanCache
+
+BUILD_FLOOR_N = 10_000
+BUILD_FLOOR_X = 20.0
+REPLAN_FLOOR_X = 5.0
+
+
+def _overlay(n: int):
+    return make_topology(
+        TopologySpec(kind="knn", n=n, seed=1, k=8, n_subnets=max(1, n // 100)))
+
+
+def _dense_build_s(g) -> float:
+    """The legacy pipeline a dense moderator pays per epoch: materialize the
+    cost matrix, heap-Prim the MST, BFS-color it."""
+    t0 = time.time()
+    dense = g.to_dense()
+    mst = build_mst(dense, "prim")
+    color_graph(mst, "bfs")
+    return time.time() - t0
+
+
+def _csr_build_s(g) -> float:
+    t0 = time.time()
+    SparsePlanner(g).plan(range(g.n))
+    return time.time() - t0
+
+
+def build_curve(sizes) -> list:
+    rows = []
+    for n in sizes:
+        g = _overlay(n)
+        csr_s = _csr_build_s(g)
+        dense_s = _dense_build_s(g)
+        rows.append({"n": n, "kind": "knn", "dense_s": round(dense_s, 4),
+                     "csr_s": round(csr_s, 4),
+                     "speedup": round(dense_s / csr_s, 1)})
+        print(f"[build] n={n}: dense {dense_s:.3f}s  csr {csr_s:.3f}s  "
+              f"{dense_s / csr_s:.1f}x")
+    return rows
+
+
+def replan_bench(n: int = BUILD_FLOOR_N) -> dict:
+    g = _overlay(n)
+    planner = SparsePlanner(g)
+    base = planner.plan(range(n))
+    rng = np.random.default_rng(0)
+    leaves = rng.choice(n, size=8, replace=False)
+    members = sorted(set(range(n)) - set(int(x) for x in leaves))
+    # best-of-3 on both sides: one-shot timings of a few-ms patch are
+    # allocator-noise-bound; the minimum is the honest cost
+    replan_s = full_s = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        patched = planner.replan(base, members)
+        replan_s = min(replan_s, time.time() - t0)
+        t0 = time.time()
+        scratch = planner.plan(members)
+        full_s = min(full_s, time.time() - t0)
+    equal = plan_equal(patched, scratch)
+    speedup = full_s / replan_s
+    print(f"[replan] n={n}, {len(leaves)} leaves: full {full_s * 1e3:.1f}ms  "
+          f"replan {replan_s * 1e3:.1f}ms  {speedup:.1f}x  equal={equal}")
+    return {"n": n, "n_leaves": int(len(leaves)),
+            "full_s": round(full_s, 5), "replan_s": round(replan_s, 5),
+            "speedup": round(speedup, 1), "plan_equal": bool(equal),
+            "floor_x": REPLAN_FLOOR_X}
+
+
+def scale_scenario(name: str) -> dict:
+    cache = PlanCache()
+    spec = scenarios.get(name)
+    t0 = time.time()
+    result = run_scenario(spec, executor="plan", plan_cache=cache)
+    dt = time.time() - t0
+    stats = cache.stats()
+    rounds = [{"round": r.round, "n_members": len(r.members),
+               "n_slots": r.n_slots, "transmissions": r.transmissions,
+               "bytes_mb": round(r.bytes_mb, 1)} for r in result.rounds]
+    print(f"[{name}] {dt:.2f}s  rounds={len(rounds)}  "
+          f"replan incremental={stats['replan_incremental']} "
+          f"full={stats['replan_full']}")
+    return {"time_s": round(dt, 2), "rounds": rounds,
+            "replan_counters": {k: stats[k] for k in
+                                ("replan_hits", "replan_misses",
+                                 "replan_incremental", "replan_full")}}
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    sizes = [BUILD_FLOOR_N] if smoke else [1000, 3162, BUILD_FLOOR_N]
+    out = {"build": build_curve(sizes)}
+
+    floor_row = next(r for r in out["build"] if r["n"] == BUILD_FLOOR_N)
+    out["build_floor"] = {"n": BUILD_FLOOR_N, "floor_x": BUILD_FLOOR_X,
+                          "speedup": floor_row["speedup"]}
+    out["replan"] = replan_bench()
+    out["scale_100k"] = scale_scenario("scale_100k")
+    if not smoke:
+        out["scale_1m"] = scale_scenario("scale_1m")
+
+    with open("BENCH_planner.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("wrote BENCH_planner.json")
+
+    if floor_row["speedup"] < BUILD_FLOOR_X:
+        raise SystemExit(
+            f"CSR plan build only {floor_row['speedup']}x faster than dense "
+            f"at n={BUILD_FLOOR_N}, below the {BUILD_FLOOR_X}x acceptance "
+            "floor")
+    if not out["replan"]["plan_equal"]:
+        raise SystemExit("incremental replan diverged from the from-scratch "
+                         "plan (plan_equal false)")
+    if out["replan"]["speedup"] < REPLAN_FLOOR_X:
+        raise SystemExit(
+            f"churn replan only {out['replan']['speedup']}x faster than a "
+            f"full rebuild, below the {REPLAN_FLOOR_X}x acceptance floor")
+
+
+if __name__ == "__main__":
+    main()

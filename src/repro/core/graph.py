@@ -20,6 +20,15 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .sparse import (
+    CSRGraph,
+    color_bfs_csr,
+    color_greedy_csr,
+    color_jones_plassmann,
+    connected_components,
+    mst_boruvka_csr,
+)
+
 Edge = Tuple[int, int]
 
 
@@ -50,40 +59,50 @@ class Graph:
         if (adj < 0).any():
             raise ValueError("edge costs must be non-negative")
         self.adj = adj
+        self._adjacency: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] \
+            = None  # lazy CSR view; adj is never mutated in place after init
 
     # -- basic queries ------------------------------------------------------
     @property
     def n(self) -> int:
         return self.adj.shape[0]
 
+    def _csr_view(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Memoized (indptr, indices, data) adjacency — one ``nonzero`` over
+        the whole matrix instead of one per ``neighbors``/``edges`` call."""
+        cache = self._adjacency
+        if cache is None:
+            rows, cols = np.nonzero(self.adj)
+            indptr = np.zeros(self.n + 1, dtype=np.int64)
+            if len(rows):
+                indptr[1:] = np.cumsum(np.bincount(rows, minlength=self.n))
+            cache = self._adjacency = (indptr, cols.astype(np.int64),
+                                       self.adj[rows, cols])
+        return cache
+
     def edges(self) -> List[Tuple[int, int, float]]:
         """All undirected edges as (u, v, cost), u < v."""
-        iu = np.triu_indices(self.n, k=1)
-        out = []
-        for u, v in zip(*iu):
-            c = self.adj[u, v]
-            if c > 0:
-                out.append((int(u), int(v), float(c)))
-        return out
+        indptr, indices, data = self._csr_view()
+        u = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(indptr))
+        mask = u < indices
+        return [(int(a), int(b), float(c))
+                for a, b, c in zip(u[mask], indices[mask], data[mask])]
 
     def neighbors(self, u: int) -> List[int]:
-        return [int(v) for v in np.nonzero(self.adj[u])[0]]
+        indptr, indices, _ = self._csr_view()
+        return indices[indptr[u]:indptr[u + 1]].tolist()
 
     def degree(self, u: int) -> int:
-        return int((self.adj[u] > 0).sum())
+        indptr, _, _ = self._csr_view()
+        return int(indptr[u + 1] - indptr[u])
 
     def is_connected(self) -> bool:
         if self.n == 0:
             return True
-        seen = {0}
-        stack = [0]
-        while stack:
-            u = stack.pop()
-            for v in self.neighbors(u):
-                if v not in seen:
-                    seen.add(v)
-                    stack.append(v)
-        return len(seen) == self.n
+        indptr, indices, _ = self._csr_view()
+        u = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(indptr))
+        mask = u < indices
+        return connected_components(self.n, u[mask], indices[mask])[0] == 1
 
     def total_cost(self) -> float:
         return float(np.triu(self.adj, k=1).sum())
@@ -217,6 +236,15 @@ MST_ALGORITHMS = {"prim": mst_prim, "kruskal": mst_kruskal, "boruvka": mst_boruv
 
 
 def build_mst(g: Graph, algorithm: str = "prim", root: int = 0) -> Graph:
+    if isinstance(g, CSRGraph):
+        # sparse fast path: every algorithm name runs the frontier-vectorized
+        # Borůvka (repro.core.sparse) — with distinct edge costs (generated
+        # topologies, a.s.) the MST is unique, so the choice of algorithm
+        # only ever affected speed, and under ties the (w, u, v) total order
+        # keeps the output deterministic
+        if algorithm not in MST_ALGORITHMS:
+            raise ValueError(f"unknown MST algorithm {algorithm!r}")
+        return mst_boruvka_csr(g)
     if algorithm == "prim":
         return mst_prim(g, root)
     try:
@@ -306,15 +334,43 @@ def color_ldf(g: Graph) -> np.ndarray:
     return color_welsh_powell(g)  # LDF == Welsh-Powell's ordering rule
 
 
+def color_jones_plassmann_dense(g: Graph, seed: int = 0) -> np.ndarray:
+    """Jones–Plassmann on a dense graph (via its CSR view) — identical to
+    the sequential greedy coloring in seeded-random-priority order."""
+    return color_jones_plassmann(CSRGraph.from_dense(g), seed=seed)
+
+
+def color_greedy(g: Graph) -> np.ndarray:
+    """Vectorized greedy coloring in vertex-id order (dense entry point)."""
+    return color_greedy_csr(CSRGraph.from_dense(g))
+
+
 COLORING_ALGORITHMS = {
     "bfs": color_bfs,
     "dsatur": color_dsatur,
     "welsh_powell": color_welsh_powell,
     "ldf": color_ldf,
+    "jones_plassmann": color_jones_plassmann_dense,
+    "greedy": color_greedy,
 }
+
+# coloring algorithms with a sparse (CSRGraph) implementation
+SPARSE_COLORINGS = ("bfs", "jones_plassmann", "greedy")
 
 
 def color_graph(g: Graph, algorithm: str = "bfs", root: int = 0) -> np.ndarray:
+    if isinstance(g, CSRGraph):
+        if algorithm == "bfs":
+            return color_bfs_csr(g, root)
+        if algorithm == "jones_plassmann":
+            return color_jones_plassmann(g)
+        if algorithm == "greedy":
+            return color_greedy_csr(g)
+        if algorithm in COLORING_ALGORITHMS:
+            raise ValueError(
+                f"coloring algorithm {algorithm!r} has no sparse "
+                f"implementation; CSRGraph supports {SPARSE_COLORINGS}")
+        raise ValueError(f"unknown coloring algorithm {algorithm!r}")
     if algorithm == "bfs":
         return color_bfs(g, root)
     try:
@@ -324,6 +380,10 @@ def color_graph(g: Graph, algorithm: str = "bfs", root: int = 0) -> np.ndarray:
 
 
 def is_proper_coloring(g: Graph, colors: np.ndarray) -> bool:
+    if isinstance(g, CSRGraph):
+        u, v, _ = g.edges_arrays()
+        colors = np.asarray(colors)
+        return bool(len(u) == 0 or (colors[u] != colors[v]).all())
     for u, v, _ in g.edges():
         if colors[u] == colors[v]:
             return False
@@ -374,9 +434,13 @@ def slot_length_for_colors(
 
         return slot_length_for_network(g, colors, network, model_size_mb)
     per_node_max = np.zeros(g.n)
-    for u in range(g.n):
-        ns = g.neighbors(u)
-        per_node_max[u] = max((g.adj[u, v] for v in ns), default=0.0)
+    if isinstance(g, CSRGraph):
+        src = np.repeat(np.arange(g.n, dtype=np.int64), g.degrees)
+        np.maximum.at(per_node_max, src, g.data)
+    else:
+        for u in range(g.n):
+            ns = g.neighbors(u)
+            per_node_max[u] = max((g.adj[u, v] for v in ns), default=0.0)
     ping_max = 0.0
     for c in np.unique(colors):
         grp = per_node_max[colors == c]
@@ -394,16 +458,20 @@ def slot_length_for_colors(
 
 @dataclass
 class TopologySpec:
-    kind: str  # complete | erdos_renyi | watts_strogatz | barabasi_albert
+    # dense kinds: complete | erdos_renyi | watts_strogatz | barabasi_albert
+    # sparse kinds (CSRGraph, O(E) memory): knn | ring | torus | power_law
+    kind: str
     n: int = 10
     seed: int = 0
     p: float = 0.45  # ER edge prob
-    k: int = 4  # WS ring degree
+    k: int = 4  # WS ring degree; also knn neighbour count / ring lattice degree
     beta: float = 0.3  # WS rewire prob
-    m: int = 2  # BA attachment count
+    m: int = 2  # BA attachment count; also power_law mean degree / 2
     n_subnets: int = 3
     intra_cost_ms: Tuple[float, float] = (0.4, 1.5)  # local-link ping range
     inter_cost_ms: Tuple[float, float] = (8.0, 40.0)  # router-hop ping range
+    alpha: float = 2.5  # power_law degree exponent
+    max_degree: int = 64  # power_law per-node degree bound
 
     def subnet(self, node: int) -> int:
         """Which router subnet a node lives behind (the one true mapping —
@@ -432,8 +500,131 @@ def _edge_cost(u: int, v: int, spec: TopologySpec, rng: np.random.Generator) -> 
     return float(rng.uniform(lo, hi))
 
 
+# ---------------------------------------------------------------------------
+# Sparse generators: O(E) edge-array construction, no dense matrix. The cost
+# model matches the dense kinds (subnet-aware intra/inter ping ranges) but is
+# drawn vectorized, one uniform per edge in sorted (u, v) order.
+# ---------------------------------------------------------------------------
+
+
+def _sparse_edge_costs(u: np.ndarray, v: np.ndarray,
+                       spec: TopologySpec,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Vectorized subnet-aware costs for edge arrays (the `_edge_cost` rule)."""
+    su = (u * np.int64(spec.n_subnets)) // np.int64(spec.n)
+    sv = (v * np.int64(spec.n_subnets)) // np.int64(spec.n)
+    same = su == sv
+    r = rng.uniform(size=len(u))
+    intra = spec.intra_cost_ms[0] + r * (spec.intra_cost_ms[1]
+                                         - spec.intra_cost_ms[0])
+    inter = spec.inter_cost_ms[0] + r * (spec.inter_cost_ms[1]
+                                         - spec.inter_cost_ms[0])
+    return np.where(same, intra, inter)
+
+
+def _dedup_pairs(n: int, u: np.ndarray, v: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Canonical unique undirected pairs (lo < hi, sorted), loops dropped."""
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    keep = lo != hi
+    key = np.unique(lo[keep] * np.int64(n) + hi[keep])
+    return key // n, key % n
+
+
+def _stitch_components(n: int, u: np.ndarray,
+                       v: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Chain the component roots so the graph is connected (the sparse
+    analogue of the dense generator's consecutive-component stub links)."""
+    from .sparse import union_edges  # local alias of the shared routine
+
+    labels = union_edges(n, u, v)
+    roots = np.unique(labels)
+    if len(roots) > 1:
+        u = np.concatenate([u, roots[:-1]])
+        v = np.concatenate([v, roots[1:]])
+    return u, v
+
+
+def _make_sparse_topology(spec: TopologySpec) -> CSRGraph:
+    rng = np.random.default_rng(spec.seed)
+    n = spec.n
+    if spec.kind == "ring":
+        # ring lattice: each node linked to its k/2 successors (mod n)
+        k = max(2, spec.k - spec.k % 2)
+        base = np.arange(n, dtype=np.int64)
+        u = np.repeat(base, k // 2)
+        off = np.tile(np.arange(1, k // 2 + 1, dtype=np.int64), n)
+        v = (u + off) % n
+    elif spec.kind == "torus":
+        side = int(np.sqrt(n))
+        if side * side != n:
+            raise ValueError(f"torus topology needs a square n, got {n}")
+        base = np.arange(n, dtype=np.int64)
+        row, col = base // side, base % side
+        right = row * side + (col + 1) % side
+        down = ((row + 1) % side) * side + col
+        u = np.concatenate([base, base])
+        v = np.concatenate([right, down])
+    elif spec.kind == "knn":
+        # geometric k-NN: seeded points in the unit square; candidates come
+        # from a window in grid-cell order (spatially clustered), so the
+        # search is O(n·k) with no KD-tree and no n^2 distance matrix
+        k = max(1, spec.k)
+        pts = rng.uniform(size=(n, 2))
+        grid = max(1, int(np.sqrt(n / max(k, 1))))
+        cell = (pts[:, 1] * grid).astype(np.int64) * grid \
+            + (pts[:, 0] * grid).astype(np.int64)
+        order = np.argsort(cell, kind="stable")
+        pos = np.empty(n, dtype=np.int64)
+        pos[order] = np.arange(n)
+        win = max(k, 4)
+        offs = np.concatenate([np.arange(-win, 0), np.arange(1, win + 1)])
+        cand_pos = np.clip(pos[:, None] + offs[None, :], 0, n - 1)
+        cand = order[cand_pos]
+        d2 = ((pts[:, None, :] - pts[cand]) ** 2).sum(axis=2)
+        d2[cand == np.arange(n)[:, None]] = np.inf  # clipped self-windows
+        kk = min(k, d2.shape[1])
+        nearest = np.argpartition(d2, kk - 1, axis=1)[:, :kk]
+        u = np.repeat(np.arange(n, dtype=np.int64), kk)
+        v = np.take_along_axis(cand, nearest, axis=1).ravel()
+    elif spec.kind == "power_law":
+        # Chung–Lu style: endpoints drawn with probability ∝ rank^(-1/(α-1)),
+        # then per-node degree capped at spec.max_degree (drop each node's
+        # excess incidences beyond the bound)
+        n_draws = max(1, spec.m) * n
+        wgt = np.arange(1, n + 1, dtype=np.float64) ** (-1.0 / (spec.alpha - 1))
+        p = wgt / wgt.sum()
+        u = rng.choice(n, size=n_draws, p=p).astype(np.int64)
+        v = rng.choice(n, size=n_draws, p=p).astype(np.int64)
+        u, v = _dedup_pairs(n, u, v)
+        eid = np.arange(len(u), dtype=np.int64)
+        inc_node = np.concatenate([u, v])
+        inc_edge = np.concatenate([eid, eid])
+        order = np.lexsort((inc_edge, inc_node))
+        node_sorted = inc_node[order]
+        starts = np.flatnonzero(np.r_[True, node_sorted[1:] != node_sorted[:-1]])
+        counts = np.diff(np.r_[starts, len(node_sorted)])
+        rank = np.arange(len(node_sorted)) - np.repeat(starts, counts)
+        over = np.zeros(len(u), dtype=bool)
+        np.logical_or.at(over, inc_edge[order], rank >= spec.max_degree)
+        u, v = u[~over], v[~over]
+    else:
+        raise ValueError(f"unknown sparse topology kind {spec.kind!r}")
+    u, v = _dedup_pairs(n, u, v)
+    u, v = _stitch_components(n, u, v)
+    w = _sparse_edge_costs(u, v, spec, rng)
+    return CSRGraph.from_edge_arrays(n, u, v, w)
+
+
 def make_topology(spec: TopologySpec) -> Graph:
-    """Generate a connected topology with subnet-aware costs."""
+    """Generate a connected topology with subnet-aware costs.
+
+    Dense kinds return a :class:`Graph`; the sparse kinds
+    (``SPARSE_TOPOLOGY_KINDS``) return a :class:`CSRGraph` built from edge
+    arrays — O(E) memory, so ``n`` can reach the million-node scale.
+    """
+    if spec.kind in SPARSE_TOPOLOGY_KINDS:
+        return _make_sparse_topology(spec)
     rng = np.random.default_rng(spec.seed)
     n = spec.n
     edges: set = set()
@@ -503,3 +694,4 @@ def make_topology(spec: TopologySpec) -> Graph:
 
 
 TOPOLOGY_KINDS = ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert")
+SPARSE_TOPOLOGY_KINDS = ("knn", "ring", "torus", "power_law")

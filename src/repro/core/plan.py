@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .graph import Graph
+from .sparse import CSRGraph
 
 # A directed send: (src, dst, payload). For dissemination the payload is the
 # *payload id* of the model (or model segment) being forwarded; for tree
@@ -224,7 +225,9 @@ class CommPolicy:
 
 
 def _color_cycle(colors: np.ndarray, first_color: Optional[int] = None) -> List[int]:
-    cycle = sorted(set(int(c) for c in np.asarray(colors)))
+    # np.unique is the vectorized sorted-set — same output as the historical
+    # sorted(set(...)), a million-element colors array away from a Python loop
+    cycle = [int(c) for c in np.unique(np.asarray(colors))]
     if first_color is not None and first_color in cycle:
         i0 = cycle.index(first_color)
         cycle = cycle[i0:] + cycle[:i0]
@@ -233,6 +236,9 @@ def _color_cycle(colors: np.ndarray, first_color: Optional[int] = None) -> List[
 
 def _csr(g: Graph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """CSR adjacency (indptr, indices, degree) with neighbors ascending."""
+    if isinstance(g, CSRGraph):
+        return (g.indptr.astype(np.int64), g.indices.astype(np.int64),
+                g.degrees.astype(np.int64))
     rows, cols = np.nonzero(g.adj > 0)
     deg = np.bincount(rows, minlength=g.n)
     indptr = np.concatenate(([0], np.cumsum(deg)))
@@ -708,6 +714,19 @@ class MstExchangePolicy(CommPolicy):
 
     def emit(self, slot_idx: int) -> SlotSends:
         color = self.color_cycle[self._ptr]
+        if isinstance(self.graph, CSRGraph):
+            # sparse fast path: the slot's multicast as pure array gathers —
+            # same sends in the same (u ascending, neighbours ascending)
+            # order as the dense loop, O(sends) instead of O(n) Python
+            indptr, indices = self.graph.indptr, self.graph.indices
+            active = np.flatnonzero(np.asarray(self.colors) == color)
+            cnt = indptr[active + 1] - indptr[active]
+            total = int(cnt.sum())
+            local = np.arange(total, dtype=np.int64) - np.repeat(
+                np.cumsum(cnt) - cnt, cnt)
+            dst = indices[np.repeat(indptr[active], cnt) + local]
+            src = np.repeat(active, cnt)
+            return SlotSends(slot_idx, color, src, dst, src.copy(), active)
         sends = [(u, v, u) for u in range(self.n)
                  if int(self.colors[u]) == color
                  for v in self.graph.neighbors(u)]

@@ -21,6 +21,8 @@ policy:
 * :func:`compile_flooding` — the baseline: naive flooding broadcast on the
   overlay graph (every node forwards everything to every neighbour), with
   duplicate transmissions counted, as in the paper's comparison.
+* :func:`compile_exchange` — one MOSGU exchange step (the per-round
+  measurement unit); accepts the sparse planner's CSR trees directly.
 
 Because XLA's ``collective_permute`` requires distinct sources *and* distinct
 targets, each slot's send list (a multicast forest) is decomposed into
@@ -82,6 +84,18 @@ def compile_flooding(overlay: Graph, max_rounds: int = 10_000) -> SlotPlan:
     """Naive flooding, rounds-synchronous: all of a round's sends land in one
     slot (that is the point: maximal link contention)."""
     return compile_policy(FloodingPolicy(overlay), max_slots=max_rounds)
+
+
+def compile_exchange(mst, colors: np.ndarray,
+                     max_slots: int = 100_000) -> SlotPlan:
+    """Compile one MOSGU exchange step (each node multicasts its own model
+    to its MST neighbours in its color's slot). ``mst`` may be a dense
+    :class:`Graph` or a :class:`~repro.core.sparse.CSRGraph` — the sparse
+    planner's trees compile without densification."""
+    from .plan import MstExchangePolicy  # not in the back-compat re-exports
+
+    return compile_policy(MstExchangePolicy(mst, colors),
+                          max_slots=max_slots)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,9 @@ measure        policy key — ``measure_policy`` slot/transmission counts
 timing         (policy key, underlay fingerprint) — the analytic
                :class:`~repro.core.network.TimingProfile` (payload-
                independent; evaluated per wire size)
+member plan    (overlay, members, mst/coloring algorithm) — the sparse
+               :class:`~repro.core.replan.MemberPlan`; misses repair the
+               previous epoch's plan incrementally when one exists
 =============  ==========================================================
 
 Cached :class:`~repro.core.plan.CommPolicy` objects are stateful but every
@@ -37,9 +40,11 @@ from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core.graph import Graph, TopologySpec
+from ..core.graph import MST_ALGORITHMS, Graph, TopologySpec, color_graph
 from ..core.network import TimingProfile, _field_tuple, underlay_fingerprint
 from ..core.plan import CommPolicy, make_policy, measure_policy
+from ..core.replan import MemberPlan, SparsePlanner
+from ..core.sparse import CSRGraph
 
 if TYPE_CHECKING:  # pragma: no cover
     from .spec import ScenarioSpec
@@ -87,6 +92,9 @@ class PlanCache:
         self._measures: Dict[PolicyKey, Dict[str, float]] = {}
         self._trajectories: Dict[Tuple[Any, ...], list] = {}
         self._timings: Dict[Tuple[Any, ...], TimingProfile] = {}
+        self._member_plans: Dict[Tuple[Any, ...], MemberPlan] = {}
+        self._planners: Dict[Tuple[Any, ...], SparsePlanner] = {}
+        self._latest_plan: Dict[Tuple[Any, ...], MemberPlan] = {}
         self.counters: Dict[str, int] = {
             "overlay_hits": 0, "overlay_misses": 0,
             "subgraph_hits": 0, "subgraph_misses": 0,
@@ -94,6 +102,8 @@ class PlanCache:
             "measure_hits": 0, "measure_misses": 0,
             "trajectory_hits": 0, "trajectory_misses": 0,
             "timing_hits": 0, "timing_misses": 0,
+            "replan_hits": 0, "replan_misses": 0,
+            "replan_incremental": 0, "replan_full": 0,
         }
 
     # -- stages --------------------------------------------------------------
@@ -179,6 +189,67 @@ class PlanCache:
             self.counters["timing_hits"] += 1
         return profile
 
+    def member_plan(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+                    overlay: CSRGraph) -> MemberPlan:
+        """Sparse MST + Jones–Plassmann plan for one membership epoch.
+
+        This is the incremental-replanning stage: one
+        :class:`~repro.core.replan.SparsePlanner` lives per (overlay,
+        algorithms) key, and the *latest* plan built on it seeds a churn
+        repair (``replan``) instead of a from-scratch build whenever the
+        epoch's member set is new. ``replan_incremental`` vs
+        ``replan_full`` counts how often the repair path actually ran —
+        the metric behind the ≥5× churn-replan floor in
+        ``benchmarks/planner_bench.py``.
+        """
+        if spec.mst_algorithm not in MST_ALGORITHMS:
+            raise ValueError(f"unknown MST algorithm {spec.mst_algorithm!r}")
+        key = (overlay_fingerprint(spec), members,
+               spec.mst_algorithm, spec.coloring_algorithm)
+        plan = self._member_plans.get(key)
+        if plan is not None:
+            self.counters["replan_hits"] += 1
+            return plan
+        self.counters["replan_misses"] += 1
+        pkey = key[:1] + key[2:]
+        planner = self._planners.get(pkey)
+        if planner is None:
+            planner = self._planners[pkey] = SparsePlanner(overlay)
+        prev = self._latest_plan.get(pkey)
+        if prev is not None:
+            plan = planner.replan(prev, members)
+            self.counters["replan_incremental"] += 1
+        else:
+            plan = planner.plan(members)
+            self.counters["replan_full"] += 1
+        self._member_plans[key] = self._latest_plan[pkey] = plan
+        return plan
+
+    def sparse_policy(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+                      overlay: CSRGraph) -> CommPolicy:
+        """``make_policy`` over a sparse overlay — no dense subgraph is ever
+        materialized. MST protocols consume the :meth:`member_plan` tree and
+        colors (recoloring with the requested algorithm when it is not the
+        planner's native Jones–Plassmann); flooding runs on the member-
+        induced CSR subgraph directly."""
+        key = policy_key(spec, members)
+        pol = self._policies.get(key)
+        if pol is not None:
+            self.counters["policy_hits"] += 1
+            return pol
+        self.counters["policy_misses"] += 1
+        if spec.protocol in ("flooding", "broadcast", "broadcast_exchange"):
+            pol = make_policy(spec.protocol, overlay.subgraph(members))
+        else:
+            plan = self.member_plan(spec, members, overlay)
+            mst, colors = plan.member_mst()
+            if spec.coloring_algorithm != "jones_plassmann":
+                colors = color_graph(mst, spec.coloring_algorithm)
+            pol = make_policy(spec.protocol, mst, mst=mst, colors=colors,
+                              n_segments=spec.n_segments)
+        self._policies[key] = pol
+        return pol
+
     def trajectory(self, spec: "ScenarioSpec", build) -> list:
         """Cached membership trajectory: ``(round, moderator, members,
         applied_churn)`` per round. Depends only on (overlay, rounds, churn)
@@ -202,4 +273,5 @@ class PlanCache:
         out["unique_subgraphs"] = len(self._subgraphs)
         out["unique_policies"] = len(self._policies)
         out["unique_timing_profiles"] = len(self._timings)
+        out["unique_member_plans"] = len(self._member_plans)
         return out

@@ -54,6 +54,7 @@ from ..core.moderator import ConnectivityReport, Moderator
 from ..core.netsim import TestbedSpec, simulate_policy
 from ..core.network import NetworkSpec, TimingProfile, as_network_model
 from ..core.plan import CommPolicy
+from ..core.sparse import CSRGraph
 from .cache import PlanCache
 from .spec import (
     ChurnEvent,
@@ -125,14 +126,74 @@ def _rotate(mod: Moderator) -> Moderator:
     return mod.handover(mod.elect_next({u: candidate for u in members}))
 
 
+class _SparseMembership:
+    """Drop-in for the per-round ``Moderator`` view on sparse overlays.
+
+    A real :class:`Moderator` keeps an O(n·degree) dict-of-dicts report
+    table — filing it alone dominates at n=100k and is infeasible at 1M.
+    Sparse plans only need the *membership trajectory* (the MST/coloring
+    come from :class:`~repro.core.replan.SparsePlanner` over the CSR
+    overlay), so this tracker replicates exactly the lifecycle semantics of
+    the dense driver — sequential churn feasibility via
+    :func:`applicable_churn`, emergency election to ``members[0]`` when the
+    moderator leaves (``elect_next({})``'s round-robin fallback), unanimous
+    round-robin rotation — over a plain membership set.
+    """
+
+    def __init__(self, n: int) -> None:
+        self._current = set(range(n))
+        self.moderator_id = 0
+
+    @property
+    def members(self) -> List[int]:
+        return sorted(self._current)
+
+    def apply_churn(self, churn: Sequence[ChurnEvent], round_idx: int,
+                    n_limit: int) -> List[ChurnEvent]:
+        applied, _ = applicable_churn(churn, round_idx, self.members,
+                                      n_limit=n_limit)
+        for ev in applied:
+            if ev.action == "leave":
+                self._current.discard(ev.node)
+            else:
+                self._current.add(ev.node)
+        return applied
+
+    def elect(self) -> None:
+        members = self.members
+        if self.moderator_id not in self._current:
+            self.moderator_id = members[0]
+        else:  # round-robin rotation, as the unanimous vote tallies
+            i = members.index(self.moderator_id)
+            self.moderator_id = members[(i + 1) % len(members)]
+
+
+def _sparse_membership_rounds(spec: ScenarioSpec, overlay: CSRGraph):
+    mod = _SparseMembership(overlay.n)
+    for r in range(spec.rounds):
+        applied = mod.apply_churn(spec.churn, r, overlay.n)
+        if mod.moderator_id not in mod._current:
+            mod.elect()  # emergency: the moderator itself left
+        members = mod.members
+        if len(members) < 2:
+            raise ValueError(f"scenario {spec.name!r} dropped below 2 nodes")
+        yield r, mod, members, applied
+        mod.elect()
+
+
 def membership_rounds(spec: ScenarioSpec, overlay: Graph):
     """The shared per-round moderator driver, identical on every executor.
 
     Yields ``(round_idx, moderator, members, applied_churn)`` after applying
     the round's churn events, running the emergency re-election when the
     current moderator itself left, and enforcing the 2-node floor; rotates
-    the moderator by round-robin vote after control returns.
+    the moderator by round-robin vote after control returns. Sparse (CSR)
+    overlays get the lightweight :class:`_SparseMembership` driver with the
+    same semantics but no O(n·degree) report table.
     """
+    if isinstance(overlay, CSRGraph):
+        yield from _sparse_membership_rounds(spec, overlay)
+        return
     mod = Moderator(0, spec.mst_algorithm, spec.coloring_algorithm,
                     protocol=spec.protocol, n_segments=spec.n_segments)
     _file_initial_reports(mod, overlay)
@@ -264,9 +325,15 @@ class Executor:
 
     def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
         """Membership changed: rebuild per-epoch state. The default pulls the
-        policy for the member subgraph from the plan cache."""
-        self.policy = self.cache.policy(
-            self.spec, members, lambda: mod.build_graph()[0])
+        policy for the member subgraph from the plan cache — via the sparse
+        planner (incremental churn replanning, no dense subgraph) when the
+        overlay is a :class:`CSRGraph`."""
+        if isinstance(self.overlay, CSRGraph):
+            self.policy = self.cache.sparse_policy(
+                self.spec, members, self.overlay)
+        else:
+            self.policy = self.cache.policy(
+                self.spec, members, lambda: mod.build_graph()[0])
         self.wire_send_mb = per_send_wire_mb(
             self.codec, self.payload_mb, self.policy.payload_fraction)
 
@@ -377,6 +444,12 @@ class PlanExecutor(Executor):
 
     def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
         super().begin_epoch(mod, members)
+        if isinstance(self.overlay, CSRGraph):
+            # counting only at scale: the analytic timing walk needs the
+            # dense member-masked underlay, which has no sparse form yet
+            self._stats = self.cache.measure(self.spec, members, self.policy)
+            self._timing = None
+            return
         testbed = _member_testbed(self.spec, members)
         profile = self.cache.timing(
             self.spec, members, testbed,
@@ -390,14 +463,16 @@ class PlanExecutor(Executor):
     def run_round(self, rctx: RoundContext) -> RoundReport:
         tx = self._stats["transmissions"]
         est = self._timing
-        return rctx.report(
-            n_slots=self._stats["n_slots"], transmissions=tx,
-            bytes_mb=tx * self.payload_mb * self.policy.payload_fraction,
-            bytes_on_wire_mb=tx * self.wire_send_mb,
+        timing_fields = {} if est is None else dict(
             total_time_s=est.total_time_s,
             mean_transfer_s=est.mean_transfer_s,
             mean_bandwidth_mbps=est.mean_bandwidth_mbps,
             max_concurrency=est.max_concurrency)
+        return rctx.report(
+            n_slots=self._stats["n_slots"], transmissions=tx,
+            bytes_mb=tx * self.payload_mb * self.policy.payload_fraction,
+            bytes_on_wire_mb=tx * self.wire_send_mb,
+            **timing_fields)
 
     def run_cells(self, cells, plan_cache: Optional[PlanCache] = None,
                   record_trace: bool = False) -> List[ScenarioResult]:
@@ -410,10 +485,18 @@ class PlanExecutor(Executor):
         est_memo: Dict[Tuple[int, float], Any] = {}
         rows: List[Tuple] = []  # (cell_idx, rctx, n_slots, tx, frac, wire, est)
         cell_meta: List[Tuple[ScenarioSpec, float]] = []
+        sparse_results: Dict[int, ScenarioResult] = {}
         for ci, cell in enumerate(cells):
             spec = cell.spec
             spec.validate()
             overlay = cache.overlay(spec)
+            if isinstance(overlay, CSRGraph):
+                # sparse cells go through the serial per-cell path (the
+                # incremental replanner keys epochs sequentially anyway)
+                sparse_results[ci] = self.execute(
+                    spec, record_trace=record_trace, plan_cache=cache)
+                cell_meta.append((spec, spec.payload_mb()))
+                continue
             payload_mb = spec.payload_mb()
             codec = spec.codec_obj()
             cell_meta.append((spec, payload_mb))
@@ -475,10 +558,11 @@ class PlanExecutor(Executor):
                 mean_transfer_s=est.mean_transfer_s,
                 mean_bandwidth_mbps=est.mean_bandwidth_mbps,
                 max_concurrency=est.max_concurrency))
-        return [ScenarioResult(
+        return [sparse_results.get(ci) or ScenarioResult(
             scenario=spec.name, executor=self.name, protocol=spec.protocol,
             payload_mb=payload_mb, rounds=reps, spec=spec.to_dict())
-            for (spec, payload_mb), reps in zip(cell_meta, per_cell)]
+            for ci, ((spec, payload_mb), reps)
+            in enumerate(zip(cell_meta, per_cell))]
 
 
 @register("engine")

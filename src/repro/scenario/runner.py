@@ -30,6 +30,15 @@ Link failures (``spec.drop_rate``) are a runtime-queue behaviour: the engine
 executor retransmits (paper III-D) and counts drops; the static executors
 run failure-free.
 
+Sparse overlays (``TopologySpec`` kinds in
+:data:`repro.core.graph.SPARSE_TOPOLOGY_KINDS` — k-NN, ring/torus lattices,
+bounded-degree power-law) never materialize a dense matrix: the plan
+executor drives them through the CSR planner
+(:class:`~repro.core.replan.SparsePlanner`), with churn epochs re-planned
+incrementally. ``run_scenario(scenarios.get("scale_100k"),
+executor="plan")`` is the 100k-node reference path; timing fields are
+``None`` there (counting only — the analytic underlay model is dense).
+
 Grids of scenarios go through :func:`repro.scenario.sweep.run_sweep`, which
 shares MST/coloring/policy work across cells through one
 :class:`~repro.scenario.cache.PlanCache`; ``compare_protocols`` below is a

@@ -1,0 +1,265 @@
+"""Sparse planner: CSR kernels, generators, incremental replanning, cache.
+
+Seeded (always-run) counterparts of the hypothesis sweeps in
+``test_sparse_properties.py``: the CSR Borůvka MST against the dense Prim
+reference, Jones–Plassmann propriety and its equivalence to the sequential
+greedy coloring, the sparse topology generators, replan-equals-scratch
+churn sequences, the tombstoned adjacency's invariants, the PlanCache
+replan counters, and a small-scale run of the ``scale_100k`` shape.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    TopologySpec,
+    build_mst,
+    color_graph,
+    is_proper_coloring,
+    make_topology,
+    mst_prim,
+)
+from repro.core.replan import MemberPlan, SparsePlanner, plan_equal
+from repro.core.sparse import (
+    CSRGraph,
+    color_jones_plassmann,
+    color_priority_greedy,
+    mst_boruvka_csr,
+)
+
+DENSE_KINDS = ("complete", "erdos_renyi", "watts_strogatz", "barabasi_albert")
+SPARSE_KINDS = ("knn", "ring", "torus", "power_law")
+# torus requires a square n; every kind accepts these
+SPARSE_SIZES = {"small": 100, "mid": 144, "large": 400}
+
+
+def _churned(rng, n, members):
+    """One random churn delta over ``members`` (leaves + rejoins)."""
+    cur = set(members)
+    n_leave = int(rng.integers(0, max(2, len(cur) // 4)))
+    leaves = rng.choice(sorted(cur), size=min(n_leave, len(cur) - 3),
+                        replace=False)
+    cur -= set(int(x) for x in leaves)
+    outside = sorted(set(range(n)) - cur)
+    n_join = int(rng.integers(0, max(2, n // 4)))
+    if outside and n_join:
+        joins = rng.choice(outside, size=min(n_join, len(outside)),
+                           replace=False)
+        cur |= set(int(x) for x in joins)
+    return sorted(cur)
+
+
+class TestCSRKernels:
+    @pytest.mark.parametrize("kind", DENSE_KINDS)
+    def test_boruvka_cost_matches_prim(self, kind):
+        g = make_topology(TopologySpec(kind=kind, n=24, seed=3))
+        dense_cost = float(mst_prim(g).adj.sum()) / 2.0
+        csr_mst = mst_boruvka_csr(CSRGraph.from_dense(g))
+        assert csr_mst.n_edges == g.n - 1
+        assert csr_mst.total_cost() == pytest.approx(dense_cost)
+
+    @pytest.mark.parametrize("kind", SPARSE_KINDS)
+    def test_build_mst_dispatch_on_csr(self, kind):
+        g = make_topology(TopologySpec(kind=kind, n=121, seed=2, k=5))
+        mst = build_mst(g, "boruvka")
+        assert isinstance(mst, CSRGraph)
+        assert mst.n_edges == g.n - 1
+        assert mst.is_connected()
+
+    @pytest.mark.parametrize("kind", SPARSE_KINDS)
+    def test_jones_plassmann_proper(self, kind):
+        g = make_topology(TopologySpec(kind=kind, n=144, seed=4, k=6))
+        colors = color_jones_plassmann(g)
+        assert is_proper_coloring(g, colors)
+        assert colors.min() >= 0
+
+    def test_jp_equals_sequential_greedy(self):
+        # JP's fixpoint IS the sequential greedy coloring in priority order
+        g = make_topology(TopologySpec(kind="knn", n=80, seed=5, k=6))
+        rng = np.random.default_rng(11)
+        rank = rng.permutation(g.n).astype(np.int64)
+        colors = color_priority_greedy(g.indptr, g.indices, rank)
+        ref = -np.ones(g.n, dtype=np.int64)
+        for v in np.argsort(rank):
+            used = {int(ref[u]) for u in g.neighbors(v) if ref[u] >= 0}
+            c = 0
+            while c in used:
+                c += 1
+            ref[v] = c
+        assert np.array_equal(colors, ref)
+
+
+class TestSparseGenerators:
+    @pytest.mark.parametrize("kind", SPARSE_KINDS)
+    def test_connected_and_sparse(self, kind):
+        n = 400
+        g = make_topology(TopologySpec(kind=kind, n=n, seed=1, k=6))
+        assert isinstance(g, CSRGraph)
+        assert g.n == n
+        assert g.is_connected()
+        # the point of the sparse kinds: edges grow linearly, not as n^2
+        assert g.n_edges < 20 * n
+        u, v, w = g.edges_arrays()
+        assert (w > 0).all()
+        assert (u != v).all()
+
+    def test_deterministic(self):
+        a = make_topology(TopologySpec(kind="power_law", n=200, seed=9))
+        b = make_topology(TopologySpec(kind="power_law", n=200, seed=9))
+        assert np.array_equal(a.indptr, b.indptr)
+        assert np.array_equal(a.indices, b.indices)
+        assert np.array_equal(a.data, b.data)
+
+
+class TestReplan:
+    def test_replan_equals_scratch_over_churn_sequences(self):
+        rng = np.random.default_rng(7)
+        checked = 0
+        for trial in range(6):
+            kind = ("knn", "ring", "power_law")[trial % 3]
+            n = int(rng.integers(30, 100))
+            g = make_topology(TopologySpec(kind=kind, n=n, seed=trial, k=6))
+            pl = SparsePlanner(g, seed=trial)
+            members = list(range(n))
+            plan = pl.plan(members)
+            for _ in range(4):
+                members = _churned(rng, n, members)
+                try:
+                    scratch = pl.plan(members)
+                except ValueError:
+                    scratch = None
+                if scratch is None:
+                    with pytest.raises(ValueError):
+                        pl.replan(plan, members)
+                    continue
+                plan = pl.replan(plan, members)
+                assert plan_equal(plan, scratch)
+                checked += 1
+        assert checked >= 10
+
+    def test_leave_then_rejoin_round_trips(self):
+        g = make_topology(TopologySpec(kind="knn", n=60, seed=0, k=6))
+        pl = SparsePlanner(g)
+        full = pl.plan(range(60))
+        # evict five members that keep the subgraph connected
+        members, out = list(range(60)), []
+        for v in range(60):
+            if len(out) == 5:
+                break
+            trial = [m for m in members if m != v]
+            try:
+                pl.plan(trial)
+            except ValueError:
+                continue
+            members, out = trial, out + [v]
+        assert len(out) == 5
+        shrunk = pl.replan(full, members)
+        back = pl.replan(shrunk, range(60))
+        assert plan_equal(back, full)
+        assert plan_equal(back, pl.plan(range(60)))
+
+    def test_no_delta_is_identity(self):
+        g = make_topology(TopologySpec(kind="ring", n=50, seed=1))
+        pl = SparsePlanner(g)
+        plan = pl.plan(range(50))
+        again = pl.replan(plan, range(50))
+        assert plan_equal(again, plan)
+
+    def test_patched_adjacency_matches_tree(self):
+        # the carried (indptr, dst) index — tombstones aside — must hold
+        # exactly the tree's directed edges, symmetrically
+        rng = np.random.default_rng(3)
+        g = make_topology(TopologySpec(kind="knn", n=90, seed=2, k=6))
+        pl = SparsePlanner(g)
+        members = list(range(90))
+        plan = pl.plan(members)
+        for _ in range(5):
+            members = _churned(rng, 90, members)
+            try:
+                plan = pl.replan(plan, members)
+            except ValueError:
+                continue
+            ip, dst = plan.adj_indptr, plan.adj_dst
+            have = set()
+            for a in range(90):
+                for b in dst[int(ip[a]):int(ip[a + 1])].tolist():
+                    if b >= 0:
+                        have.add((a, b))
+            want = set()
+            for u, v in zip(plan.tree_u.tolist(), plan.tree_v.tolist()):
+                want.add((u, v))
+                want.add((v, u))
+            assert have == want
+
+    def test_colors_are_proper_after_replan(self):
+        g = make_topology(TopologySpec(kind="power_law", n=120, seed=5))
+        pl = SparsePlanner(g)
+        plan = pl.plan(range(120))
+        members = list(range(120))
+        for v in range(120):  # evict three connectivity-safe members
+            if len(members) == 117:
+                break
+            trial = [m for m in members if m != v]
+            try:
+                pl.plan(trial)
+            except ValueError:
+                continue
+            members = trial
+        plan = pl.replan(plan, members)
+        mst, colors = plan.member_mst()
+        assert is_proper_coloring(mst, colors)
+
+
+class TestPlanCacheStage:
+    def test_replan_counters(self):
+        from repro.scenario.cache import PlanCache
+        from repro.scenario.spec import ScenarioSpec
+
+        spec = ScenarioSpec(
+            name="t", overlay=TopologySpec(kind="knn", n=200, seed=1, k=6),
+            mst_algorithm="boruvka", coloring_algorithm="jones_plassmann")
+        overlay = spec.overlay_graph()
+        cache = PlanCache()
+        full = tuple(range(200))
+        churned = tuple(m for m in range(200) if m != 17)
+
+        p0 = cache.member_plan(spec, full, overlay)
+        assert cache.stats()["replan_full"] == 1
+        p1 = cache.member_plan(spec, churned, overlay)
+        assert cache.stats()["replan_incremental"] == 1
+        assert plan_equal(p1, SparsePlanner(overlay).plan(churned))
+        cache.member_plan(spec, full, overlay)  # epoch key seen before
+        stats = cache.stats()
+        assert stats["replan_hits"] == 1
+        assert stats["replan_misses"] == 2
+        assert isinstance(p0, MemberPlan)
+
+    def test_scale_shape_smoke(self):
+        # the scale_100k scenario shape at a test-sized n, end to end on
+        # the plan executor with churn through the incremental path
+        from repro.scenario import run_scenario
+        from repro.scenario.cache import PlanCache
+        from repro.scenario.spec import ChurnEvent, ScenarioSpec
+
+        spec = ScenarioSpec(
+            name="scale_smoke",
+            overlay=TopologySpec(kind="knn", n=300, seed=1, k=8,
+                                 n_subnets=3),
+            protocol="mosgu_exchange", mst_algorithm="boruvka",
+            coloring_algorithm="jones_plassmann", payload=21.2, rounds=2,
+            churn=(ChurnEvent(1, "leave", 7), ChurnEvent(1, "leave", 42)),
+            executors=("plan",))
+        cache = PlanCache()
+        result = run_scenario(spec, executor="plan", plan_cache=cache)
+        assert len(result.rounds) == 2
+        assert result.rounds[0].transmissions > 0
+        assert len(result.rounds[1].members) == 298
+        assert cache.stats()["replan_incremental"] >= 1
+
+
+def test_scale_registry_entries_declared():
+    from repro.scenario import scenarios
+
+    big = scenarios.get("scale_100k")
+    assert big.overlay.n == 100_000
+    assert big.executors == ("plan",)
+    assert scenarios.get("scale_1m").overlay.n == 1_000_000

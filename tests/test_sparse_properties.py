@@ -1,0 +1,98 @@
+"""Hypothesis property sweeps for the sparse planner (optional dev extra).
+
+Randomized counterparts of the seeded checks in ``test_sparse.py``:
+
+  * CSR Borůvka total cost equals ``mst_prim``'s on random connected
+    graphs (the tree itself is only unique under distinct costs, so the
+    cost is the comparable invariant),
+  * Jones–Plassmann always emits a proper coloring,
+  * an incremental replan after a random leave/join delta is
+    ``plan_equal`` to the from-scratch plan on the surviving members.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional dev extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import TopologySpec, is_proper_coloring, make_topology, mst_prim
+from repro.core.replan import SparsePlanner, plan_equal
+from repro.core.sparse import CSRGraph, color_jones_plassmann, mst_boruvka_csr
+
+
+@st.composite
+def connected_dense(draw, max_n=14):
+    n = draw(st.integers(3, max_n))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    adj = rng.uniform(0.1, 10.0, size=(n, n))
+    adj = (adj + adj.T) / 2.0
+    np.fill_diagonal(adj, 0.0)
+    # thin it while keeping a random spanning path, so it stays connected
+    mask = rng.uniform(size=(n, n)) < draw(st.floats(0.3, 1.0))
+    mask |= mask.T
+    order = rng.permutation(n)
+    mask[order[:-1], order[1:]] = mask[order[1:], order[:-1]] = True
+    adj *= mask
+    from repro.core.graph import Graph
+
+    return Graph(adj)
+
+
+@st.composite
+def sparse_overlays(draw):
+    kind = draw(st.sampled_from(["knn", "ring", "power_law"]))
+    n = draw(st.integers(24, 120))
+    seed = draw(st.integers(0, 2**10))
+    k = draw(st.integers(3, 8))
+    return make_topology(TopologySpec(kind=kind, n=n, seed=seed, k=k))
+
+
+class TestSparseProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(g=connected_dense())
+    def test_boruvka_cost_matches_prim(self, g):
+        dense_cost = float(mst_prim(g).adj.sum()) / 2.0
+        csr_mst = mst_boruvka_csr(CSRGraph.from_dense(g))
+        assert csr_mst.n_edges == g.n - 1
+        assert csr_mst.total_cost() == pytest.approx(dense_cost)
+
+    @settings(max_examples=40, deadline=None)
+    @given(g=sparse_overlays(), seed=st.integers(0, 2**10))
+    def test_jones_plassmann_proper(self, g, seed):
+        colors = color_jones_plassmann(g, seed=seed)
+        assert is_proper_coloring(g, colors)
+        assert int(colors.min()) >= 0
+
+    @settings(max_examples=40, deadline=None)
+    @given(g=sparse_overlays(), seed=st.integers(0, 2**16),
+           steps=st.integers(1, 4))
+    def test_replan_equals_scratch(self, g, seed, steps):
+        rng = np.random.default_rng(seed)
+        pl = SparsePlanner(g, seed=seed)
+        members = list(range(g.n))
+        plan = pl.plan(members)
+        for _ in range(steps):
+            cur = set(members)
+            leaves = rng.choice(sorted(cur),
+                                size=int(rng.integers(0, len(cur) // 4 + 1)),
+                                replace=False)
+            cur -= set(int(x) for x in leaves)
+            if len(cur) < 3:
+                cur = set(members)
+            outside = sorted(set(range(g.n)) - cur)
+            if outside:
+                joins = rng.choice(
+                    outside, size=int(rng.integers(0, len(outside) + 1)),
+                    replace=False)
+                cur |= set(int(x) for x in joins)
+            new_members = sorted(cur)
+            try:
+                scratch = pl.plan(new_members)
+            except ValueError:
+                with pytest.raises(ValueError):
+                    pl.replan(plan, new_members)
+                continue
+            plan = pl.replan(plan, new_members)
+            assert plan_equal(plan, scratch)
+            members = new_members
