@@ -1,0 +1,147 @@
+"""Asynchronous protocol-engine benchmark: the event executor vs the
+analytic steady-state throughput form, plus the staleness=0 exactness
+contract against the fluid simulator.
+
+Standalone usage (CI async smoke):
+
+  PYTHONPATH=src python benchmarks/async_bench.py --smoke
+
+writes ``BENCH_async.json`` with two sections:
+
+* ``async_vs_sync`` — the registry sweep of the same name (staleness
+  window x gossip protocol x underlay preset) run on the event executor
+  under straggler injection. Per cell: the engine's measured steady-state
+  rounds/sec (trailing inter-completion gaps, pipeline-fill transient
+  excluded) against :func:`repro.core.network.estimate_throughput`; the
+  estimate must land within ±15% on every cell or the run exits nonzero.
+* ``staleness0_equivalence`` — ``max_staleness=0`` must reproduce the
+  netsim executor's per-round ``bytes_on_wire`` *exactly* (float-equal,
+  not approximately) on every netsim-capable registry scenario.
+
+Both gates are the ISSUE-7 acceptance criteria made executable; CI runs
+this file and uploads the JSON as an artifact.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.core.network import estimate_throughput
+from repro.scenario import executors, run_scenario, scenarios
+
+TOL = 0.15  # the ±15% tolerance contract (DESIGN.md §12/§14)
+
+
+def async_vs_sync_bench(tol: float = TOL) -> dict:
+    """The ``async_vs_sync`` sweep on the event executor, cell by cell.
+
+    Measured steady period = mean trailing inter-completion gap after a
+    ``max_staleness + 2``-round warmup (the pipeline-fill transient);
+    the analytic estimate reuses the *same* policy, member-masked
+    compiled underlay, and wire size the executor ran with.
+    """
+    sweep = scenarios.get_sweep("async_vs_sync")
+    rows = []
+    outside = []
+    t0 = time.perf_counter()
+    for cell in sweep.cells():
+        spec = cell.spec
+        ex = executors.get("event")
+        res = ex.execute(spec)
+        comp = [r.completed_at_s for r in res.rounds]
+        warm = spec.max_staleness + 2
+        measured_period = (comp[-1] - comp[warm - 1]) / (len(comp) - warm)
+        est = estimate_throughput(
+            ex.policy, ex._net, ex.wire_send_mb * 1e6,
+            max_staleness=spec.max_staleness,
+            compute_time_s=spec.compute_time_s,
+            compute_jitter_s=spec.compute_jitter_s)
+        ratio = est.steady_period_s / measured_period
+        key = (f"ms{spec.max_staleness}/{spec.protocol}/"
+               f"{spec.underlay}")
+        if not (1 - tol) <= ratio <= (1 + tol):
+            outside.append((key, round(ratio, 3)))
+        rows.append({
+            "cell": key,
+            "max_staleness": spec.max_staleness,
+            "protocol": spec.protocol,
+            "underlay": spec.underlay,
+            "measured_period_s": round(measured_period, 4),
+            "measured_rounds_per_s": round(1.0 / measured_period, 6),
+            "estimated_period_s": round(est.steady_period_s, 4),
+            "estimated_rounds_per_s": round(est.rounds_per_s, 6),
+            "fill_latency_s": round(est.fill_latency_s, 4),
+            "bottleneck_busy_s": round(est.bottleneck_busy_s, 4),
+            "node_span_s": round(est.node_span_s, 4),
+            "ratio": round(ratio, 4),
+        })
+    wall = time.perf_counter() - t0
+    if outside:
+        raise SystemExit(
+            f"estimate_throughput outside ±{tol:.0%} of the event engine "
+            f"on async_vs_sync cells: {outside}")
+    ratios = [r["ratio"] for r in rows]
+    return {
+        "n_cells": len(rows),
+        "tolerance": tol,
+        "min_ratio": min(ratios),
+        "max_ratio": max(ratios),
+        "cells_within_tolerance": len(rows),
+        "wall_s": round(wall, 3),
+        "cells": rows,
+    }
+
+
+def staleness0_equivalence() -> dict:
+    """Exact per-round ``bytes_on_wire`` equality, event vs netsim, on
+    every netsim-capable registry scenario (all have ``max_staleness=0``).
+    """
+    rows = {}
+    for name in scenarios.names():
+        spec = scenarios.get(name)
+        if "netsim" not in spec.executors:
+            continue
+        rn = run_scenario(spec, executor="netsim")
+        re_ = run_scenario(spec, executor="event")
+        bad = [a.round for a, b in zip(rn.rounds, re_.rounds)
+               if a.bytes_on_wire_mb != b.bytes_on_wire_mb
+               or a.transmissions != b.transmissions
+               or a.bytes_mb != b.bytes_mb]
+        if bad:
+            raise SystemExit(
+                f"event executor diverges from netsim byte accounting on "
+                f"scenario {name!r}, rounds {bad}")
+        rows[name] = {
+            "rounds": len(rn.rounds),
+            "bytes_on_wire_mb": round(rn.total_bytes_on_wire_mb, 4),
+            "exact": True,
+        }
+    return rows
+
+
+def main(argv) -> int:
+    bench = {
+        "async_vs_sync": async_vs_sync_bench(),
+        "staleness0_equivalence": staleness0_equivalence(),
+    }
+    with open("BENCH_async.json", "w") as f:
+        json.dump(bench, f, indent=2)
+    avs = bench["async_vs_sync"]
+    print(f"wrote BENCH_async.json ({avs['n_cells']} async_vs_sync cells, "
+          f"{len(bench['staleness0_equivalence'])} equivalence scenarios)")
+    print(f"  estimate/engine period ratios {avs['min_ratio']}.."
+          f"{avs['max_ratio']} (contract ±{avs['tolerance']:.0%}), "
+          f"{avs['wall_s']}s wall")
+    for row in avs["cells"]:
+        print(f"  {row['cell']:28s} engine={row['measured_period_s']:8.2f}s "
+              f"estimate={row['estimated_period_s']:8.2f}s "
+              f"ratio={row['ratio']:.3f}")
+    for name, row in bench["staleness0_equivalence"].items():
+        print(f"  staleness0 {name:24s} rounds={row['rounds']} "
+              f"wire={row['bytes_on_wire_mb']:10.1f}MB exact={row['exact']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

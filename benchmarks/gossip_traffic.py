@@ -23,7 +23,8 @@ batched counting path on a 32-cell grid (acceptance floor: >= 5x), and
 analytic-vs-fluid round-time ratio per underlay preset x payload plus the
 batched-analytic-vs-netsim speedup on ``table3_full`` (floor: >= 5x,
 per-cell agreement +-15%).
-``--list`` prints the scenario and sweep registries and exits.
+``--list`` prints the registered executors (with their capability flags)
+and the scenario and sweep registries, then exits.
 """
 from __future__ import annotations
 
@@ -323,7 +324,14 @@ def underlay_bench(speedup_floor: float = 5.0) -> dict:
 
 
 def list_scenarios() -> None:
+    from repro.scenario import executors as _executors
+
     width = max(len(n) for n in scenarios.names())
+    print("registered executors:")
+    for name, caps in _executors.capability_table().items():
+        flags = ",".join(f for f, on in caps.items() if on) or "-"
+        print(f"{name:{width}s}  {flags}")
+    print("\nscenarios:")
     for name in scenarios.names():
         spec = scenarios.get(name)
         print(f"{name:{width}s}  protocol={spec.protocol:18s} "

@@ -763,6 +763,79 @@ def estimate_timing(plan, network, bytes_per_payload: float) -> TimingEstimate:
 
 
 # ---------------------------------------------------------------------------
+# Steady-state throughput (the event engine's analytic contract)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputEstimate:
+    """Analytic steady-state throughput of an asynchronously-pipelined plan.
+
+    ``fill_latency_s`` is the pipeline-fill time: admission of round 0 to
+    its completion (one full round through the store-and-forward underlay,
+    mean compute included). ``steady_period_s`` is the predicted
+    inter-round completion gap once the ``max_staleness + 1``-deep pipeline
+    is full; ``rounds_per_s`` its reciprocal. The two structural bounds the
+    period is derived from are exposed for inspection: the busiest link's
+    serialized per-round demand and the slowest node's serial span.
+    """
+
+    rounds_per_s: float
+    steady_period_s: float
+    fill_latency_s: float
+    bottleneck_busy_s: float  # max over links of Σ size/capacity per round
+    node_span_s: float  # max over nodes of compute + own-clock round work
+
+
+def estimate_throughput(plan, network, bytes_per_payload: float,
+                        max_staleness: int = 0,
+                        compute_time_s: float = 0.0,
+                        compute_jitter_s: float = 0.0) -> ThroughputEstimate:
+    """Steady-state rounds/sec of a plan pipelined on the event engine.
+
+    Same calling convention as :func:`estimate_timing` (``plan`` is a live
+    policy or compiled plan, ``bytes_per_payload`` the wire bytes of one
+    send), plus the async knobs of the event executor. The form walks
+    *one* round through the discrete-event link model (the pipeline fill),
+    then takes the steady-state period as the binding structural bound:
+
+    * ``max_staleness = 0`` — the barrier: every round repeats the fill,
+      so the period *is* the single-round makespan;
+    * ``max_staleness >= 1`` — rounds overlap; the period is bounded below
+      by the busiest link's per-round serialized demand, the slowest
+      node's serial span (a node's rounds chain on its own clock), and the
+      admission window ``fill / (max_staleness + 1)`` — the max of the
+      three is the estimate.
+
+    Compute jitter enters at its expectation (``jitter / 2``); the
+    contract against multi-round engine runs is the same ±15% the timing
+    model carries against the fluid simulator (enforced by
+    ``benchmarks/async_bench.py`` and ``tests/test_events.py``).
+    """
+    from .events import AsyncEventEngine, plan_slots  # local: engine layer
+
+    net = as_compiled_network(network, n=plan.n)
+    slots = plan_slots(plan)
+    size_mb = bytes_per_payload / 1e6
+    n = net.n
+    compute = np.full(n, compute_time_s + compute_jitter_s / 2.0)
+    eng = AsyncEventEngine()
+    eng.add_round(range(n), net, slots, size_mb, compute)
+    (rt,) = eng.run()
+    fill = rt.completed_s
+    link_busy = max(eng.link_busy.values(), default=0.0)
+    span = float(eng.node_spans(0).max()) if n else 0.0
+    if max_staleness <= 0:
+        period = fill
+    else:
+        period = max(link_busy, span, fill / (max_staleness + 1))
+    return ThroughputEstimate(
+        rounds_per_s=(1.0 / period if period > 0 else float("inf")),
+        steady_period_s=period, fill_latency_s=fill,
+        bottleneck_busy_s=link_busy, node_span_s=span)
+
+
+# ---------------------------------------------------------------------------
 # Network-aware slot length (paper III-C, on the physical model)
 # ---------------------------------------------------------------------------
 

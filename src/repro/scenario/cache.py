@@ -19,6 +19,7 @@ subgraph
 policy         (overlay, members, protocol, n_segments, mst/coloring
                algorithm, first color) — ``make_policy`` output
 measure        policy key — ``measure_policy`` slot/transmission counts
+slots          policy key — per-slot (src, dst) arrays for the event engine
 timing         (policy key, underlay fingerprint) — the analytic
                :class:`~repro.core.network.TimingProfile` (payload-
                independent; evaluated per wire size)
@@ -91,6 +92,7 @@ class PlanCache:
         self._policies: Dict[PolicyKey, CommPolicy] = {}
         self._measures: Dict[PolicyKey, Dict[str, float]] = {}
         self._trajectories: Dict[Tuple[Any, ...], list] = {}
+        self._slots: Dict[PolicyKey, list] = {}
         self._timings: Dict[Tuple[Any, ...], TimingProfile] = {}
         self._member_plans: Dict[Tuple[Any, ...], MemberPlan] = {}
         self._planners: Dict[Tuple[Any, ...], SparsePlanner] = {}
@@ -100,6 +102,7 @@ class PlanCache:
             "subgraph_hits": 0, "subgraph_misses": 0,
             "policy_hits": 0, "policy_misses": 0,
             "measure_hits": 0, "measure_misses": 0,
+            "slots_hits": 0, "slots_misses": 0,
             "trajectory_hits": 0, "trajectory_misses": 0,
             "timing_hits": 0, "timing_misses": 0,
             "replan_hits": 0, "replan_misses": 0,
@@ -169,6 +172,23 @@ class PlanCache:
                 raise ValueError("measure miss needs the policy to count")
         else:
             self.counters["measure_hits"] += 1
+        return cached
+
+    def slots(self, spec: "ScenarioSpec", members: Tuple[int, ...],
+              pol: CommPolicy) -> list:
+        """Cached per-slot ``(src, dst)`` arrays for the event engine
+        (:func:`repro.core.events.policy_slots`). One policy walk per unique
+        plan — every round of an epoch, and every cell sharing the plan,
+        replays the same arrays."""
+        from ..core.events import policy_slots
+
+        key = policy_key(spec, members)
+        cached = self._slots.get(key)
+        if cached is None:
+            self.counters["slots_misses"] += 1
+            cached = self._slots[key] = policy_slots(pol)
+        else:
+            self.counters["slots_hits"] += 1
         return cached
 
     def timing(self, spec: "ScenarioSpec", members: Tuple[int, ...],

@@ -33,7 +33,20 @@ netsim     :func:`repro.core.netsim.simulate_policy` — contended fluid
 jax        :func:`repro.dfl.collectives.gossip_exchange` — compiled
            ``ppermute`` on a device mesh (``provides_numerics``,
            ``moves_payloads``)
+event      :class:`repro.core.events.AsyncEventEngine` — discrete-event
+           asynchronous rounds: per-node virtual clocks, bounded
+           staleness, seeded compute jitter, drops and churn at virtual
+           timestamps (``supports_drops``, ``provides_timing``,
+           ``supports_staleness``)
 =========  ================================================================
+
+A spec that *needs* a capability (``drop_rate > 0`` needs
+``supports_drops``; ``max_staleness``/``compute_time_s``/
+``compute_jitter_s`` need ``supports_staleness``; ``spec.require`` names
+any flag explicitly) fails loudly on an executor lacking it —
+:meth:`Executor.check_capabilities` raises a ``ValueError`` naming the
+missing capability and the executors that provide it, instead of silently
+ignoring the field.
 
 Every executor reuses MST/coloring/policy work through a shared
 :class:`~repro.scenario.cache.PlanCache` (one per call by default;
@@ -260,6 +273,34 @@ def _subgraph_required() -> Graph:
         "must file every epoch's subgraph when it is first built")
 
 
+def required_capabilities(spec: ScenarioSpec) -> List[Tuple[str, str]]:
+    """The capability flags a spec demands, each with the reason why.
+
+    Implicit: ``drop_rate > 0`` needs ``supports_drops`` (drops silently
+    not happening would corrupt failure-mode results); any of
+    ``max_staleness`` / ``compute_time_s`` / ``compute_jitter_s`` needs
+    ``supports_staleness``. Explicit: every name in ``spec.require``
+    (validated against :attr:`Executor.CAPABILITY_FLAGS`).
+    """
+    out: List[Tuple[str, str]] = []
+    for flag in spec.require:
+        if flag not in Executor.CAPABILITY_FLAGS:
+            raise ValueError(
+                f"spec.require names unknown capability {flag!r}; known: "
+                f"{Executor.CAPABILITY_FLAGS}")
+        out.append((flag, "spec.require"))
+    have = {flag for flag, _ in out}
+    if spec.drop_rate > 0 and "supports_drops" not in have:
+        out.append(("supports_drops", f"drop_rate={spec.drop_rate}"))
+    async_fields = [
+        f"{f}={getattr(spec, f)}"
+        for f in ("max_staleness", "compute_time_s", "compute_jitter_s")
+        if getattr(spec, f) > 0]
+    if async_fields and "supports_staleness" not in have:
+        out.append(("supports_staleness", ", ".join(async_fields)))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # The executor protocol
 # ---------------------------------------------------------------------------
@@ -301,9 +342,11 @@ class Executor:
     provides_numerics: bool = False  # fills RoundReport.numerics_ok
     moves_payloads: bool = False  # moves real (codec-encoded) payloads
     counting_only: bool = False  # pure accounting; safe at N=1000 sweep scale
+    supports_staleness: bool = False  # honours max_staleness / compute jitter
 
     CAPABILITY_FLAGS = ("supports_drops", "provides_timing",
-                        "provides_numerics", "moves_payloads", "counting_only")
+                        "provides_numerics", "moves_payloads",
+                        "counting_only", "supports_staleness")
 
     # state set by execute() before any hook runs
     spec: ScenarioSpec
@@ -318,6 +361,28 @@ class Executor:
     @classmethod
     def capabilities(cls) -> Dict[str, bool]:
         return {flag: bool(getattr(cls, flag)) for flag in cls.CAPABILITY_FLAGS}
+
+    def check_capabilities(self, spec: ScenarioSpec) -> None:
+        """Fail loudly when the spec needs a capability this executor lacks.
+
+        Implicit requirements come from the spec's fields (see
+        :func:`required_capabilities`); explicit ones from ``spec.require``.
+        The error names every missing capability, why the spec needs it,
+        and which registered executors provide them all.
+        """
+        required = required_capabilities(spec)
+        missing = [(flag, why) for flag, why in required
+                   if not getattr(self, flag, False)]
+        if not missing:
+            return
+        providers = sorted(
+            n for n, caps in capability_table().items()
+            if all(caps.get(flag) for flag, _ in missing))
+        reasons = "; ".join(f"{flag!r} ({why})" for flag, why in missing)
+        raise ValueError(
+            f"executor {self.name!r} lacks capability {reasons} required by "
+            f"scenario {spec.name!r}; executors providing "
+            f"{'it' if len(missing) == 1 else 'them all'}: {providers}")
 
     # -- hooks ---------------------------------------------------------------
     def begin(self) -> None:
@@ -347,6 +412,7 @@ class Executor:
     def execute(self, spec: ScenarioSpec, record_trace: bool = False,
                 plan_cache: Optional[PlanCache] = None) -> ScenarioResult:
         spec.validate()
+        self.check_capabilities(spec)
         self.spec = spec
         self.record_trace = record_trace
         self.cache = plan_cache if plan_cache is not None else PlanCache()
@@ -489,6 +555,7 @@ class PlanExecutor(Executor):
         for ci, cell in enumerate(cells):
             spec = cell.spec
             spec.validate()
+            self.check_capabilities(spec)
             overlay = cache.overlay(spec)
             if isinstance(overlay, CSRGraph):
                 # sparse cells go through the serial per-cell path (the
@@ -728,6 +795,89 @@ class JaxExecutor(Executor):
             n_slots=n_slots, transmissions=tx,
             bytes_mb=bytes_mb, bytes_on_wire_mb=wire_mb,
             numerics_ok=numerics_ok)
+
+
+@register("event")
+class EventExecutor(Executor):
+    """Discrete-event asynchronous engine (:mod:`repro.core.events`):
+    per-node virtual clocks over the same plan IR, pipelined per-segment
+    sends, a bounded-staleness admission window, seeded compute jitter,
+    and drops/churn at virtual timestamps.
+
+    ``run_round`` only *registers* rounds (membership, compiled underlay,
+    slot arrays, per-node compute draws); the whole multi-round simulation
+    runs in :meth:`finish`, which back-fills every report's timing fields
+    from the engine's virtual clock — rounds overlap in virtual time, so
+    no single round's timing is final until the heap drains.
+
+    With ``max_staleness=0`` admission is a global barrier and byte
+    accounting reproduces the netsim executor *exactly* (same policy, same
+    membership trajectory, same per-send wire size, same left-to-right
+    float accumulation); ``total_time_s`` is the round's inter-completion
+    gap, so the scenario total equals the virtual-clock makespan.
+    """
+
+    supports_drops = True
+    provides_timing = True
+    supports_staleness = True
+
+    def begin(self) -> None:
+        from ..core.events import AsyncEventEngine
+
+        spec = self.spec
+        self._engine = AsyncEventEngine(
+            max_staleness=spec.max_staleness, drop_rate=spec.drop_rate,
+            drop_seed=spec.drop_seed, record_events=self.record_trace)
+        self._pending: List[Tuple[RoundReport, float, float]] = []
+
+    def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
+        super().begin_epoch(mod, members)
+        self._stats = self.cache.measure(self.spec, members, self.policy)
+        self._slots = self.cache.slots(self.spec, members, self.policy)
+        self._net = as_network_model(_member_testbed(self.spec, members))
+
+    def run_round(self, rctx: RoundContext) -> RoundReport:
+        spec = self.spec
+        n = len(rctx.members)
+        # straggler injection: per-(round, node) seeded uniform jitter on
+        # top of the declared local compute time
+        compute = np.full(n, spec.compute_time_s)
+        if spec.compute_jitter_s > 0:
+            rng = np.random.default_rng([spec.jitter_seed, rctx.round_idx])
+            compute = compute + rng.random(n) * spec.compute_jitter_s
+        self._engine.add_round(rctx.members, self._net, self._slots,
+                               self.wire_send_mb, compute)
+        report = rctx.report(
+            n_slots=self._stats["n_slots"], transmissions=0, bytes_mb=0.0)
+        self._pending.append(
+            (report, self.wire_send_mb, self.policy.payload_fraction))
+        return report
+
+    def finish(self, result: ScenarioResult) -> ScenarioResult:
+        timings = self._engine.run()
+        prev_completed = 0.0
+        for (report, wire_mb, fraction), rt in zip(self._pending, timings):
+            tx = rt.attempts
+            report.transmissions = tx
+            report.drops = rt.drops
+            # same operand order as the netsim executor, and the same
+            # one-float-per-transfer accumulation the fluid simulator's
+            # bytes_on_wire_mb uses — staleness=0 equality is exact, not
+            # approximate (pinned by tests/test_events.py)
+            report.bytes_mb = tx * self.payload_mb * fraction
+            report.bytes_on_wire_mb = float(sum([wire_mb] * tx))
+            report.total_time_s = rt.completed_s - prev_completed
+            prev_completed = rt.completed_s
+            report.mean_transfer_s = rt.mean_transfer_s()
+            report.mean_bandwidth_mbps = rt.mean_bandwidth_mbps()
+            report.max_concurrency = rt.max_in_flight
+            report.admitted_at_s = rt.admitted_s
+            report.completed_at_s = rt.completed_s
+            for ev in report.churn_applied:
+                # membership changes take effect when the staleness window
+                # admits the round — a virtual timestamp, not a round count
+                ev["applied_at_s"] = rt.admitted_s
+        return result
 
 
 # Built-in executor names, in registration order (back-compat constant —

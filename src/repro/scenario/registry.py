@@ -173,11 +173,12 @@ def _lossy_links() -> ScenarioSpec:
         rounds=2,
         drop_rate=0.1,
         drop_seed=7,
-        executors=("plan", "engine"),
+        executors=("engine", "event"),
         description=(
             "10% transient link failures: the queue engine keeps dropped "
-            "entries at the FIFO head and retransmits (paper III-D); "
-            "dissemination still completes every round."))
+            "entries at the FIFO head and retransmits (paper III-D), and "
+            "the event engine retransmits at the failed delivery's virtual "
+            "timestamp; dissemination still completes every round."))
 
 
 @register("hetero_edge")
@@ -353,6 +354,50 @@ def _wan_sweep() -> SweepSpec:
             "(12 cells, one plan). On the plan executor the whole grid is "
             "one analytic timing profile per underlay; netsim "
             "cross-validates the fluid round times."))
+
+
+@register("async_stragglers")
+def _async_stragglers() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="async_stragglers",
+        overlay=TopologySpec(kind="erdos_renyi", n=10, seed=3),
+        protocol="mosgu",
+        payload="b0",
+        rounds=6,
+        max_staleness=1,
+        compute_time_s=5.0,
+        compute_jitter_s=4.0,
+        executors=("event",),
+        description=(
+            "Asynchronous rounds under straggler injection: per-node "
+            "compute 5-9 s (seeded uniform jitter), a one-round staleness "
+            "window, so fast nodes start round r+1 segment sends while "
+            "stragglers finish round r. Steady-state rounds/sec is the "
+            "metric; estimate_throughput must land within ±15%."))
+
+
+@register_sweep("async_vs_sync")
+def _async_vs_sync() -> SweepSpec:
+    return SweepSpec(
+        name="async_vs_sync",
+        base=ScenarioSpec(
+            overlay=TopologySpec(kind="erdos_renyi", n=10, seed=3,
+                                 n_subnets=3),
+            payload="b0", rounds=8,
+            compute_time_s=5.0, compute_jitter_s=4.0,
+            executors=("event",)),
+        grid={
+            "max_staleness": (0, 1, 2),
+            "protocol": ("mosgu", "segmented", "flooding"),
+            "underlay": ("paper_lan", "wan", "edge"),
+        },
+        description=(
+            "Async vs sync on the event engine: staleness window x gossip "
+            "protocol x underlay preset (27 cells) under straggler "
+            "injection. staleness=0 is today's barrier; 1-2 let fast nodes "
+            "run ahead. Measures steady-state rounds/sec and pipeline-fill "
+            "latency; estimate_throughput must track the engine within "
+            "±15% on every cell (BENCH_async.json + CI enforce it)."))
 
 
 @register("mesh_smoke")

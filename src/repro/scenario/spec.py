@@ -154,6 +154,24 @@ class ScenarioSpec:
     underlay: Optional[Union[TestbedSpec, NetworkSpec, str]] = None
     drop_rate: float = 0.0  # transient link-failure probability per transfer
     drop_seed: int = 0
+    # Asynchronous execution (the "event" executor): how many *extra* rounds
+    # may be in flight at once. 0 keeps today's barrier semantics — round
+    # r+1 is admitted only when round r has fully completed — and must
+    # reproduce the netsim executor's byte accounting exactly; k > 0 admits
+    # round r+1 once round r-k completes, so fast nodes pipeline ahead of
+    # stragglers by up to k rounds.
+    max_staleness: int = 0
+    # Per-node local compute before each round's first transmission (the
+    # straggler model): every node pays ``compute_time_s`` plus a seeded
+    # uniform draw in [0, compute_jitter_s) redrawn per (round, node).
+    compute_time_s: float = 0.0
+    compute_jitter_s: float = 0.0
+    jitter_seed: int = 0
+    # Explicit executor-capability requirements (names from
+    # ``executors.CAPABILITY_FLAGS``), on top of the implicit ones derived
+    # from the fields above (drop_rate -> supports_drops, staleness/compute
+    # -> supports_staleness). Executors lacking one raise ValueError.
+    require: Tuple[str, ...] = ()
     mst_algorithm: str = "prim"
     coloring_algorithm: str = "bfs"
     # Recommended executors (all of runner.EXECUTORS still accept the spec;
@@ -212,6 +230,12 @@ class ScenarioSpec:
             raise ValueError("n_segments must be >= 1")
         if not (0.0 <= self.drop_rate < 1.0):
             raise ValueError("drop_rate must be in [0, 1)")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if self.compute_time_s < 0:
+            raise ValueError("compute_time_s must be >= 0")
+        if self.compute_jitter_s < 0:
+            raise ValueError("compute_jitter_s must be >= 0")
         try:
             make_codec(self.codec)
         except ValueError:
@@ -267,6 +291,11 @@ class ScenarioSpec:
             "churn": [ev.to_dict() for ev in self.churn],
             "drop_rate": self.drop_rate,
             "drop_seed": self.drop_seed,
+            "max_staleness": self.max_staleness,
+            "compute_time_s": self.compute_time_s,
+            "compute_jitter_s": self.compute_jitter_s,
+            "jitter_seed": self.jitter_seed,
+            "require": list(self.require),
             "mst_algorithm": self.mst_algorithm,
             "coloring_algorithm": self.coloring_algorithm,
             "description": self.description,
@@ -294,6 +323,11 @@ class RoundReport:
     mean_transfer_s: Optional[float] = None
     mean_bandwidth_mbps: Optional[float] = None
     max_concurrency: Optional[int] = None
+    # event-executor virtual-clock milestones (None elsewhere): when the
+    # round was admitted into the staleness window and when its last
+    # delivery landed, on the engine's global virtual clock
+    admitted_at_s: Optional[float] = None
+    completed_at_s: Optional[float] = None
     # jax-only: did the collective produce the exact FedAvg mean?
     numerics_ok: Optional[bool] = None
 

@@ -284,12 +284,16 @@ class TestPlanCache:
 
 class TestExecutorRegistry:
     def test_builtins_registered_with_capabilities(self):
-        assert executors.names() == ["plan", "engine", "netsim", "jax"]
+        assert executors.names() == ["plan", "engine", "netsim", "jax",
+                                     "event"]
         caps = executors.capability_table()
         assert caps["engine"]["supports_drops"]
         assert caps["netsim"]["provides_timing"]
         assert caps["jax"]["provides_numerics"]
         assert caps["plan"]["counting_only"]
+        assert caps["event"]["supports_staleness"]
+        assert caps["event"]["supports_drops"]
+        assert caps["event"]["provides_timing"]
 
     def test_unknown_executor_raises(self):
         with pytest.raises(ValueError, match="unknown executor"):
