@@ -1,0 +1,174 @@
+"""Bench regression gate: diff current ``BENCH_*.json`` against baselines.
+
+The perf-trajectory files the smoke benches emit (``BENCH_netsim.json``,
+``BENCH_scenarios.json``, ...) are *deterministic* given the registry —
+every slot count, transmission count, virtual round time and cache counter
+is a contract, not a measurement. This gate makes that explicit: committed
+baselines live in ``benchmarks/baselines/`` and CI fails when a freshly
+generated file drifts outside its tolerance band.
+
+Wall-clock measurements (``wall_s``, ``speedup_x``, ...) vary run to run
+and are skipped; everything else must match to within the per-metric
+relative tolerance (default exact-to-rounding, 1e-6).
+
+Usage (from the repo root, after running the smoke benches):
+
+  PYTHONPATH=src python benchmarks/bench_diff.py            # gate (exit 1 on drift)
+  PYTHONPATH=src python benchmarks/bench_diff.py --update   # rebless baselines
+  PYTHONPATH=src python benchmarks/bench_diff.py --only BENCH_netsim.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Any, Iterator, List, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE_DIR = os.path.join(HERE, "baselines")
+
+#: keys measured off the host's wall clock (timings of the benchmark
+#: process itself, and the speedups derived from them) — never gated
+IGNORE_KEYS = frozenset({
+    "wall_s", "serial_s", "sweep_s", "netsim_s", "plan_s",
+    "dense_s", "csr_s", "full_s", "replan_s", "time_s",
+    "speedup", "speedup_x", "speedup_vs_fp32",
+})
+
+#: (key, relative tolerance) — metrics allowed a band wider than exact.
+#: Virtual/simulated times are deterministic but pass through float
+#: summation whose order minor refactors may legitimately change.
+TOLERANCE_BANDS = {
+    "total_time_s": 1e-6,
+    "mean_transfer_s": 1e-6,
+    "mean_bandwidth_mbps": 1e-6,
+    "measured_period_s": 1e-6,
+    "estimated_period_s": 1e-6,
+    "measured_rounds_per_s": 1e-6,
+    "estimated_rounds_per_s": 1e-6,
+    "fill_latency_s": 1e-6,
+    "bottleneck_busy_s": 1e-6,
+    "node_span_s": 1e-6,
+    "ratio": 1e-6,
+    "min_ratio": 1e-6,
+    "max_ratio": 1e-6,
+}
+DEFAULT_REL_TOL = 1e-9
+
+
+def iter_leaves(obj: Any, path: Tuple = ()) -> Iterator[Tuple[Tuple, Any]]:
+    """Flatten a JSON tree to ((key, ..., key), leaf) pairs, skipping
+    ignored wall-clock keys (and everything beneath them)."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k in IGNORE_KEYS:
+                continue
+            yield from iter_leaves(v, path + (k,))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from iter_leaves(v, path + (i,))
+    else:
+        yield path, obj
+
+
+def _tol(path: Tuple) -> float:
+    key = next((p for p in reversed(path) if isinstance(p, str)), "")
+    return TOLERANCE_BANDS.get(key, DEFAULT_REL_TOL)
+
+
+def _close(a: float, b: float, rel: float) -> bool:
+    return abs(a - b) <= rel * max(abs(a), abs(b), 1e-12)
+
+
+def diff_tree(baseline: Any, current: Any) -> List[Tuple[str, Any, Any, str]]:
+    """Structural + numeric diff; returns (path, baseline, current, kind)."""
+    base = dict(iter_leaves(baseline))
+    cur = dict(iter_leaves(current))
+    out: List[Tuple[str, Any, Any, str]] = []
+    for path in sorted(set(base) | set(cur), key=str):
+        dotted = ".".join(str(p) for p in path)
+        if path not in cur:
+            out.append((dotted, base[path], None, "missing"))
+        elif path not in base:
+            out.append((dotted, None, cur[path], "new"))
+        else:
+            b, c = base[path], cur[path]
+            if isinstance(b, bool) or isinstance(c, bool) or not (
+                    isinstance(b, (int, float)) and isinstance(c, (int, float))):
+                if b != c:
+                    out.append((dotted, b, c, "changed"))
+            elif not _close(float(b), float(c), _tol(path)):
+                out.append((dotted, b, c, f"tol={_tol(path):g}"))
+    return out
+
+
+def main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_diff.py", description=__doc__.splitlines()[0])
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding freshly generated BENCH_*.json "
+                         "(default: cwd)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="committed baselines (default: benchmarks/baselines)")
+    ap.add_argument("--only", nargs="*", metavar="FILE", default=None,
+                    help="gate just these BENCH files")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current files over the baselines (rebless)")
+    args = ap.parse_args(argv)
+
+    names = sorted(args.only if args.only else
+                   (f for f in os.listdir(args.baseline_dir)
+                    if f.startswith("BENCH_") and f.endswith(".json")))
+    if not names:
+        print(f"no baselines in {args.baseline_dir} — run the smoke benches "
+              f"and rebless with --update", file=sys.stderr)
+        return 1
+
+    failures = 0
+    for name in names:
+        cur_path = os.path.join(args.current_dir, name)
+        base_path = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(cur_path):
+            print(f"{name:22s} SKIP (not generated in {args.current_dir})")
+            continue
+        if args.update:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            shutil.copyfile(cur_path, base_path)
+            print(f"{name:22s} reblessed -> {base_path}")
+            continue
+        if not os.path.exists(base_path):
+            print(f"{name:22s} FAIL (no committed baseline — rebless with "
+                  f"--update)")
+            failures += 1
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        rows = diff_tree(baseline, current)
+        n_gated = len(dict(iter_leaves(baseline)))
+        if not rows:
+            print(f"{name:22s} OK ({n_gated} gated metrics)")
+            continue
+        failures += 1
+        print(f"{name:22s} FAIL ({len(rows)} deltas / {n_gated} gated "
+              f"metrics)")
+        print(f"  {'metric':58s} {'baseline':>14s} {'current':>14s}  band")
+        for dotted, b, c, kind in rows[:40]:
+            print(f"  {dotted[:58]:58s} {str(b)[:14]:>14s} "
+                  f"{str(c)[:14]:>14s}  {kind}")
+        if len(rows) > 40:
+            print(f"  ... {len(rows) - 40} more")
+    if failures:
+        print(f"\nbench_diff: {failures} file(s) drifted from baselines. "
+              f"If intentional, regenerate and rebless:\n"
+              f"  PYTHONPATH=src python benchmarks/bench_diff.py --update",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

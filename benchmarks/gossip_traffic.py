@@ -347,16 +347,67 @@ def list_scenarios() -> None:
         print(f"{'':{width}s}  {sweep.description}")
 
 
+def run_named_scenarios(names) -> list:
+    """Run registry scenarios by name on their primary executor.
+
+    The targeted counterpart of the ``--scenarios`` smoke matrix: no BENCH
+    file is written — this is the ``--trace`` workflow's entry point
+    (``--scenarios async_stragglers --trace trace.json`` records one
+    scenario's full virtual timeline).
+    """
+    results = []
+    for name in names:
+        spec = scenarios.get(name)
+        executor = spec.executors[0]
+        t0 = time.time()
+        res = run_scenario(spec, executor=executor)
+        wall = time.time() - t0
+        results.append(res)
+        print(f"  scenario {name:22s} [{executor:6s}] rounds={len(res.rounds)} "
+              f"tx={res.total_transmissions:7d} "
+              f"time={res.total_time_s:10.2f}s ({wall:.2f}s wall)")
+    return results
+
+
+def build_parser():
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="gossip_traffic.py",
+        description="Traffic/slot accounting benchmarks and the scenario "
+                    "smoke matrix (see module docstring).")
+    ap.add_argument("--list", action="store_true",
+                    help="print executors + scenario/sweep registries, exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip the long CSV trajectory section")
+    ap.add_argument("--scenarios", nargs="*", metavar="NAME", default=None,
+                    help="bare: run the per-executor smoke matrix and write "
+                         "BENCH_scenarios.json; with names: run just those "
+                         "registry scenarios on their primary executor "
+                         "(no BENCH file)")
+    ap.add_argument("--codec", action="store_true",
+                    help="write BENCH_codec.json")
+    ap.add_argument("--sweep", action="store_true",
+                    help="write BENCH_sweep.json")
+    ap.add_argument("--underlays", action="store_true",
+                    help="write BENCH_underlay.json")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record an observability trace of the whole "
+                         "invocation and write Chrome/Perfetto JSON to PATH")
+    return ap
+
+
 def main(argv) -> int:
-    if "--list" in argv:
+    args = build_parser().parse_args(argv)
+    if args.list:
         list_scenarios()
         return 0
-    smoke = "--smoke" in argv
-    with_scenarios = "--scenarios" in argv
-    with_codec = "--codec" in argv
-    with_sweep = "--sweep" in argv
-    with_underlays = "--underlays" in argv
-    if with_scenarios:
+    smoke = args.smoke
+    with_scenarios = args.scenarios is not None
+    named = args.scenarios or []
+    with_codec, with_sweep, with_underlays = (
+        args.codec, args.sweep, args.underlays)
+    if with_scenarios and not named:
         # the jax-executor scenario needs a multi-device (CPU) mesh; must be
         # set before jax initializes, and must compose with any XLA_FLAGS
         # the environment already exports
@@ -364,6 +415,30 @@ def main(argv) -> int:
         if "--xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 flags + " --xla_force_host_platform_device_count=4").strip()
+    prev_rec = None
+    if args.trace:
+        from repro import obs
+
+        prev_rec = obs.set_recorder(obs.Recorder())
+    try:
+        return _run_benches(args, smoke, with_scenarios, named,
+                            with_codec, with_sweep, with_underlays)
+    finally:
+        if args.trace:
+            from repro import obs
+            from repro.obs import write_trace
+
+            rec = obs.set_recorder(prev_rec)
+            write_trace(rec, args.trace)
+            print(f"wrote {args.trace} ({len(rec.spans)} spans, "
+                  f"{len(rec.counters)} counters) — open in ui.perfetto.dev")
+
+
+def _run_benches(args, smoke, with_scenarios, named,
+                 with_codec, with_sweep, with_underlays) -> int:
+    if named:
+        run_named_scenarios(named)
+        return 0
     bench = netsim_bench()
     with open("BENCH_netsim.json", "w") as f:
         json.dump(bench, f, indent=2)

@@ -157,6 +157,8 @@ class Codec:
     # -- pytree encode/decode -------------------------------------------------
     def encode(self, tree: PyTree, state: Any = None) -> Tuple[EncodedPayload, Any]:
         """Encode a numpy pytree; returns (payload, new_state)."""
+        from .. import obs
+
         total = 0
 
         def enc(leaf):
@@ -166,13 +168,29 @@ class Codec:
             total += self.wire_bytes(x.size)
             return WireLeaf(data) if isinstance(data, dict) else data
 
-        data = tree_map(enc, tree)
+        rec = obs.get()
+        if rec.enabled:
+            with rec.span(f"encode:{self.name}", cat="codec", track="codec"):
+                data = tree_map(enc, tree)
+            rec.count("codec.encodes")
+            rec.count("codec.encoded_bytes", total)
+            rec.gauge(f"codec.ratio.{self.name}", self.ratio())
+        else:
+            data = tree_map(enc, tree)
         return EncodedPayload(self.name, data, total), state
 
     def decode(self, payload: EncodedPayload) -> PyTree:
+        from .. import obs
+
         if payload.codec != self.name:
             raise ValueError(
                 f"payload encoded with {payload.codec!r}, decoding with {self.name!r}")
+        rec = obs.get()
+        if rec.enabled:
+            with rec.span(f"decode:{self.name}", cat="codec", track="codec"):
+                out = tree_map(self._decode_leaf, payload.data)
+            rec.count("codec.decodes")
+            return out
         return tree_map(self._decode_leaf, payload.data)
 
     def roundtrip(self, tree: PyTree, state: Any = None) -> Tuple[PyTree, Any]:

@@ -195,6 +195,10 @@ class AsyncEventEngine:
         self.drop_seed = int(drop_seed)
         self.record_events = bool(record_events)
         self.events: List[Tuple[Any, ...]] = []
+        # per-attempt physical transfers, kept only under record_events:
+        # (round, src_i, dst_i, slot, launch_t, ((link_key, start, end), ...),
+        #  dropped) — the raw material of virtual_spans()
+        self.transfers: List[Tuple[Any, ...]] = []
         self.link_free: Dict[Tuple[Any, ...], float] = {}
         self.link_busy: Dict[Tuple[Any, ...], float] = {}
         self._rounds: List[_Round] = []
@@ -356,6 +360,47 @@ class AsyncEventEngine:
         rs = self._rounds[round_idx]
         return rs.compute_s + (rs.done_t - rs.start_t)
 
+    def virtual_spans(self) -> List[Dict[str, Any]]:
+        """Map the run onto virtual-time spans for the observability layer
+        (requires ``record_events=True`` for the per-link lanes).
+
+        Returned dicts carry ``name/track/cat/t0/t1/args`` in engine virtual
+        seconds, one lane per physical node (``node/<id>``: a compute span
+        ending at milestone 0, then the slot-walk work span) and one lane
+        per physical link (``link/up:<id>``, ``link/down:<id>``,
+        ``link/trunk:<a>-<b>``: the store-and-forward busy interval of every
+        transfer attempt, drops included). The event executor feeds these
+        straight into :meth:`repro.obs.Recorder.add_span`."""
+        spans: List[Dict[str, Any]] = []
+        for rs in self._rounds:
+            for i, u in enumerate(rs.members):
+                if not rs.finished[i]:
+                    continue
+                c = float(rs.compute_s[i])
+                s0 = float(rs.start_t[i])
+                if c > 0:
+                    spans.append({"name": f"compute r{rs.idx}",
+                                  "track": f"node/{u}", "cat": "compute",
+                                  "t0": s0 - c, "t1": s0,
+                                  "args": {"round": rs.idx}})
+                spans.append({"name": f"round {rs.idx}",
+                              "track": f"node/{u}", "cat": "node",
+                              "t0": s0, "t1": float(rs.done_t[i]),
+                              "args": {"round": rs.idx}})
+        for r, i, v, t, _T, segs, dropped in self.transfers:
+            mem = self._rounds[r].members
+            name = f"{mem[i]}->{mem[v]} s{t}" + (" drop" if dropped else "")
+            for key, start, end in segs:
+                if key[0] in ("up", "down"):
+                    track = f"link/{key[0]}:{key[1]}"
+                else:  # ("trunk", a, b)
+                    track = f"link/trunk:{key[1]}-{key[2]}"
+                spans.append({"name": name, "track": track, "cat": "link",
+                              "t0": start, "t1": end,
+                              "args": {"round": r, "slot": t,
+                                       "dropped": dropped}})
+        return spans
+
     def _next_round_of(self, u: int, after: int) -> Optional[int]:
         for r in range(after + 1, len(self._rounds)):
             if u in self._rounds[r].members:
@@ -397,6 +442,7 @@ class AsyncEventEngine:
         cap = rs.net.per_flow_cap_mbps
         arr = T + lat
         up_done = arr
+        segs: List[Tuple[Any, float, float]] = []
         for li, (key, C) in enumerate(path):
             start = max(arr, self.link_free.get(key, 0.0))
             service = rs.size_mb / min(C, cap)
@@ -405,10 +451,14 @@ class AsyncEventEngine:
             self.link_busy[key] = self.link_busy.get(key, 0.0) + service
             if li == 0:
                 up_done = arr
+            if self.record_events:
+                segs.append((key, start, arr))
         rs.attempts += 1
         rs.inflight += 1
         rs.max_inflight = max(rs.max_inflight, rs.inflight)
         dropped = rs.rng is not None and bool(rs.rng.random() < self.drop_rate)
+        if self.record_events:
+            self.transfers.append((rs.idx, i, v, t, T, tuple(segs), dropped))
         if dropped:
             rs.drops += 1
             # the sender notices at the failed delivery time and relaunches;

@@ -178,12 +178,26 @@ class GossipEngine:
         self, round_idx: int, payloads: Optional[Sequence[Any]] = None, max_slots: int = 100_000
     ) -> int:
         """Run slots until the policy completes; return number of slots used."""
+        from .. import obs
+
         self.begin_round(round_idx, payloads)
         start = self.slot_idx
+        rec = obs.get()
         while not self.is_round_complete():
             if self.slot_idx - start >= max_slots:
                 raise RuntimeError("gossip round did not converge")
-            self.step()
+            if rec.enabled:
+                wire0 = self.round_wire_bytes
+                with rec.span(f"slot {self.slot_idx}", cat="engine-slot",
+                              track="engine", round=round_idx):
+                    report = self.step()
+                rec.count("engine.slot_sends", len(report.sends))
+                if report.dropped:
+                    rec.count("engine.slot_drops", len(report.dropped))
+                rec.count("engine.slot_wire_bytes",
+                          self.round_wire_bytes - wire0)
+            else:
+                self.step()
         return self.slot_idx - start
 
     def is_round_complete(self) -> bool:

@@ -307,6 +307,7 @@ def simulate_policy(
     record_trace: bool = False,
     max_slots: int = 100_000,
     codec=None,
+    span_offset: float = 0.0,
 ) -> SimResult:
     """Execute a communication policy on the fluid network.
 
@@ -322,7 +323,14 @@ def simulate_policy(
     ``spec`` is any underlay declaration the network API resolves: a
     :class:`TestbedSpec`, a :class:`repro.core.network.NetworkSpec`, a
     compiled model, or a preset name (sized to ``policy.n``).
+
+    When an observability recorder is active (:mod:`repro.obs`), each slot
+    becomes a virtual-time span on the ``netsim`` lane (offset by
+    ``span_offset``, so a multi-round caller strings its rounds into one
+    continuous virtual timeline) carrying the slot's send count and wire
+    bytes; disabled recorders cost one attribute check per call.
     """
+    from .. import obs
     from ..compress import per_send_wire_mb  # numpy-only, no cycle
 
     spec = as_network_model(spec, n=policy.n)
@@ -330,6 +338,7 @@ def simulate_policy(
     sim = FluidSimulator(spec, (size_mb / spec.collapse_ref_mb) ** 0.5)
     trace: Optional[List[List[Send]]] = [] if record_trace else None
     policy.reset()
+    rec = obs.get()
 
     def launch(sends: Sequence[Send]) -> None:
         if trace is not None:
@@ -344,15 +353,28 @@ def simulate_policy(
             launch(policy.on_delivered(f.src, f.dst, f.owner))
 
         sim.run_until_drained(on_complete)
+        if rec.enabled:
+            rec.add_span(f"{policy.kind} (event)", span_offset,
+                         span_offset + sim.t, track="netsim", cat="netsim",
+                         args={"transfers": len(sim.finished)})
     else:
         t = 0
         while not policy.done():
             if t >= max_slots:
                 raise RuntimeError(f"{policy.kind} did not converge")
             sends = policy.emit(t)
-            launch(sends.tuples())
+            tup = sends.tuples()
+            launch(tup)
             policy.commit(t, sends)
+            t0 = sim.t
             sim.run_until_drained(lambda f: None)
+            if rec.enabled:
+                rec.add_span(f"slot {t}", span_offset + t0,
+                             span_offset + sim.t, track="netsim",
+                             cat="netsim-slot",
+                             args={"sends": len(tup),
+                                   "wire_mb": len(tup) * size_mb})
+                rec.count("netsim.slot_wire_mb", len(tup) * size_mb)
             t += 1
     return _collect(sim, trace)
 

@@ -227,13 +227,29 @@ class DFLSession:
         """Run `local_steps` steps (each with gossip when interval==1), then
         rotate the moderator — one full paper round. Scenario-scheduled churn
         for this round fires first (replan + recompile happen below)."""
+        from .. import obs
+
+        rec = obs.get()
         self.apply_scheduled_churn()
         state_shapes = jax.eval_shape(lambda: state)
         batch_shapes = jax.eval_shape(lambda: batch)
-        self._ensure_plan(state_shapes, batch_shapes)
+        if rec.enabled and (self._dirty or self._step_fn is None):
+            with rec.span("plan:recompile", cat="plan", track="train",
+                          round=self.round_idx, members=len(self.members)):
+                self._ensure_plan(state_shapes, batch_shapes)
+        else:
+            self._ensure_plan(state_shapes, batch_shapes)
         metrics = None
         for _ in range(local_steps):
-            state, metrics = self._step_fn(state, batch)
+            if rec.enabled:
+                # the gossip exchange is fused into the jitted step (when
+                # gossip_interval == 1), so the step span covers both; the
+                # args mark it for the trace reader
+                with rec.span("train:step", cat="train", track="train",
+                              round=self.round_idx, gossip=True):
+                    state, metrics = self._step_fn(state, batch)
+            else:
+                state, metrics = self._step_fn(state, batch)
         self.round_idx += 1
         self.rotate_moderator()
         return state, metrics

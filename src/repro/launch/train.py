@@ -57,7 +57,15 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--trace", default="",
+                    help="record an observability trace of the run and write "
+                         "Chrome/Perfetto JSON to this path")
     args = ap.parse_args()
+
+    if args.trace:
+        from .. import obs
+
+        obs.set_recorder(obs.Recorder())
 
     if args.sweep and args.scenario:
         raise SystemExit("--sweep and --scenario are mutually exclusive: "
@@ -174,13 +182,22 @@ def main() -> None:
         t0 = time.time()
         state, _ = run_scenario_rounds(session, state, batch, make_batch)
         print(f"done: {scenario.rounds} scenario rounds in {time.time()-t0:.1f}s")
+        _flush_trace(args.trace)
         return
 
     step_fn = trainer.jitted_train_step(jax.eval_shape(lambda: state),
                                         jax.eval_shape(lambda: batch))
+    from .. import obs
+
+    rec = obs.get()
     t0 = time.time()
     for i in range(args.steps):
-        state, metrics = step_fn(state, batch)
+        if rec.enabled:
+            with rec.span("train:step", cat="train", track="train", step=i,
+                          gossip=(i + 1) % max(args.gossip_interval, 1) == 0):
+                state, metrics = step_fn(state, batch)
+        else:
+            state, metrics = step_fn(state, batch)
         batch = make_batch()
         if (i + 1) % args.log_every == 0 or i == 0:
             print(f"step {i+1:5d} loss={float(metrics['loss']):.4f} "
@@ -191,6 +208,19 @@ def main() -> None:
                         jax.device_get(state.params),
                         {"step": i + 1, "arch": cfg.name})
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+    _flush_trace(args.trace)
+
+
+def _flush_trace(path: str) -> None:
+    """Uninstall the run's recorder and export it as a Perfetto trace."""
+    if not path:
+        return
+    from .. import obs
+    from ..obs import write_trace
+
+    rec = obs.set_recorder(obs.NULL_RECORDER)
+    write_trace(rec, path)
+    print(f"wrote {path} ({len(rec.spans)} spans) — open in ui.perfetto.dev")
 
 
 if __name__ == "__main__":

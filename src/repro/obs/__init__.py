@@ -1,0 +1,40 @@
+"""Unified observability: spans/counters/gauges, Perfetto export, RunReport.
+
+Usage at a call site (the zero-overhead idiom)::
+
+    from repro import obs
+
+    rec = obs.get()
+    if rec.enabled:
+        rec.count("netsim.slots")
+        rec.add_span("slot", t0, t1, track="netsim", cat="netsim")
+
+Turning it on for a run::
+
+    with obs.recording(obs.Recorder()) as rec:
+        result = run_scenario(spec, executor="event")
+    obs.write_trace(rec, "trace.json")   # open in ui.perfetto.dev
+
+See DESIGN.md §15 for the recorder model, span taxonomy, and clock
+semantics.
+"""
+from .recorder import (NULL_RECORDER, NullRecorder, Recorder, Span, get,
+                       recording, set_recorder)
+from .report import RunReport, build_report, capture_mark
+from .trace import chrome_trace, validate_trace, write_trace
+
+__all__ = [
+    "NULL_RECORDER",
+    "NullRecorder",
+    "Recorder",
+    "RunReport",
+    "Span",
+    "build_report",
+    "capture_mark",
+    "chrome_trace",
+    "get",
+    "recording",
+    "set_recorder",
+    "validate_trace",
+    "write_trace",
+]

@@ -37,10 +37,11 @@ stage make cache effectiveness a first-class, testable metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.graph import MST_ALGORITHMS, Graph, TopologySpec, color_graph
 from ..core.network import TimingProfile, _field_tuple, underlay_fingerprint
 from ..core.plan import CommPolicy, make_policy, measure_policy
@@ -109,47 +110,60 @@ class PlanCache:
             "replan_incremental": 0, "replan_full": 0,
         }
 
+    # -- accounting helpers --------------------------------------------------
+    # every lookup goes through _memo (or, for the two-outcome replan stage,
+    # _bump), so "each lookup increments exactly one of {stage}_hits /
+    # {stage}_misses" is structural rather than a per-call-site convention
+    # (pinned by tests/test_obs.py)
+    def _bump(self, name: str) -> None:
+        self.counters[name] += 1
+
+    def _memo(self, stage: str, store: Dict, key, build: Callable[[], Any]):
+        """One cache lookup: hit returns the stored value, miss runs
+        ``build()`` (under a plan span when a recorder is active), stores
+        and returns it. The single place hit/miss counters are maintained."""
+        cached = store.get(key)
+        if cached is not None:
+            self._bump(stage + "_hits")
+            return cached
+        self._bump(stage + "_misses")
+        rec = obs.get()
+        if rec.enabled:
+            with rec.span(f"{stage} build", cat="plan", track="cache",
+                          stage=stage):
+                cached = build()
+        else:
+            cached = build()
+        store[key] = cached
+        return cached
+
     # -- stages --------------------------------------------------------------
     def overlay(self, spec: "ScenarioSpec") -> Graph:
-        key = overlay_fingerprint(spec)
-        g = self._overlays.get(key)
-        if g is None:
-            self.counters["overlay_misses"] += 1
-            g = self._overlays[key] = spec.overlay_graph()
-        else:
-            self.counters["overlay_hits"] += 1
-        return g
+        return self._memo("overlay", self._overlays,
+                          overlay_fingerprint(spec), spec.overlay_graph)
 
     def subgraph(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                  build) -> Graph:
         """The moderator-built dense member subgraph; ``build()`` computes it
         on a miss (it is a pure function of (overlay, member set): reports
         are filed symmetrically from the overlay's cost matrix)."""
-        key = (overlay_fingerprint(spec), members)
-        g = self._subgraphs.get(key)
-        if g is None:
-            self.counters["subgraph_misses"] += 1
-            g = self._subgraphs[key] = build()
-        else:
-            self.counters["subgraph_hits"] += 1
-        return g
+        return self._memo("subgraph", self._subgraphs,
+                          (overlay_fingerprint(spec), members), build)
 
     def policy(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                build_subgraph) -> CommPolicy:
         """``make_policy`` over the member subgraph, computed once per key."""
-        key = policy_key(spec, members)
-        pol = self._policies.get(key)
-        if pol is None:
-            self.counters["policy_misses"] += 1
+
+        def build() -> CommPolicy:
             g_sub = self.subgraph(spec, members, build_subgraph)
-            pol = self._policies[key] = make_policy(
+            return make_policy(
                 spec.protocol, g_sub,
                 mst_algorithm=spec.mst_algorithm,
                 coloring_algorithm=spec.coloring_algorithm,
                 n_segments=spec.n_segments)
-        else:
-            self.counters["policy_hits"] += 1
-        return pol
+
+        return self._memo("policy", self._policies,
+                          policy_key(spec, members), build)
 
     def measure(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                 pol: Optional[CommPolicy] = None,
@@ -160,19 +174,15 @@ class PlanCache:
         :meth:`~repro.core.network.TimingProfile.measure_stats` from the
         timing walk) so consumers needing timing *and* counts walk the
         policy once."""
-        key = policy_key(spec, members)
-        cached = self._measures.get(key)
-        if cached is None:
-            self.counters["measure_misses"] += 1
+        def build() -> Dict[str, float]:
             if stats is not None:
-                cached = self._measures[key] = stats
-            elif pol is not None:
-                cached = self._measures[key] = measure_policy(pol)
-            else:
-                raise ValueError("measure miss needs the policy to count")
-        else:
-            self.counters["measure_hits"] += 1
-        return cached
+                return stats
+            if pol is not None:
+                return measure_policy(pol)
+            raise ValueError("measure miss needs the policy to count")
+
+        return self._memo("measure", self._measures,
+                          policy_key(spec, members), build)
 
     def slots(self, spec: "ScenarioSpec", members: Tuple[int, ...],
               pol: CommPolicy) -> list:
@@ -182,14 +192,8 @@ class PlanCache:
         replays the same arrays."""
         from ..core.events import policy_slots
 
-        key = policy_key(spec, members)
-        cached = self._slots.get(key)
-        if cached is None:
-            self.counters["slots_misses"] += 1
-            cached = self._slots[key] = policy_slots(pol)
-        else:
-            self.counters["slots_hits"] += 1
-        return cached
+        return self._memo("slots", self._slots, policy_key(spec, members),
+                          lambda: policy_slots(pol))
 
     def timing(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                underlay, build) -> TimingProfile:
@@ -201,13 +205,7 @@ class PlanCache:
         ``build()`` walks the policy on a miss."""
         key = (policy_key(spec, members),
                underlay_fingerprint(underlay, spec.n))
-        profile = self._timings.get(key)
-        if profile is None:
-            self.counters["timing_misses"] += 1
-            profile = self._timings[key] = build()
-        else:
-            self.counters["timing_hits"] += 1
-        return profile
+        return self._memo("timing", self._timings, key, build)
 
     def member_plan(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                     overlay: CSRGraph) -> MemberPlan:
@@ -226,24 +224,34 @@ class PlanCache:
             raise ValueError(f"unknown MST algorithm {spec.mst_algorithm!r}")
         key = (overlay_fingerprint(spec), members,
                spec.mst_algorithm, spec.coloring_algorithm)
-        plan = self._member_plans.get(key)
-        if plan is not None:
-            self.counters["replan_hits"] += 1
-            return plan
-        self.counters["replan_misses"] += 1
         pkey = key[:1] + key[2:]
-        planner = self._planners.get(pkey)
-        if planner is None:
-            planner = self._planners[pkey] = SparsePlanner(overlay)
-        prev = self._latest_plan.get(pkey)
-        if prev is not None:
-            plan = planner.replan(prev, members)
-            self.counters["replan_incremental"] += 1
-        else:
-            plan = planner.plan(members)
-            self.counters["replan_full"] += 1
-        self._member_plans[key] = self._latest_plan[pkey] = plan
-        return plan
+
+        def build() -> MemberPlan:
+            planner = self._planners.get(pkey)
+            if planner is None:
+                planner = self._planners[pkey] = SparsePlanner(overlay)
+            prev = self._latest_plan.get(pkey)
+            rec = obs.get()
+            if prev is not None:
+                self._bump("replan_incremental")
+                if rec.enabled:
+                    with rec.span("replan incremental", cat="plan",
+                                  track="cache", members=len(members)):
+                        plan = planner.replan(prev, members)
+                else:
+                    plan = planner.replan(prev, members)
+            else:
+                self._bump("replan_full")
+                if rec.enabled:
+                    with rec.span("replan full", cat="plan", track="cache",
+                                  members=len(members)):
+                        plan = planner.plan(members)
+                else:
+                    plan = planner.plan(members)
+            self._latest_plan[pkey] = plan
+            return plan
+
+        return self._memo("replan", self._member_plans, key, build)
 
     def sparse_policy(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                       overlay: CSRGraph) -> CommPolicy:
@@ -252,23 +260,18 @@ class PlanCache:
         colors (recoloring with the requested algorithm when it is not the
         planner's native Jones–Plassmann); flooding runs on the member-
         induced CSR subgraph directly."""
-        key = policy_key(spec, members)
-        pol = self._policies.get(key)
-        if pol is not None:
-            self.counters["policy_hits"] += 1
-            return pol
-        self.counters["policy_misses"] += 1
-        if spec.protocol in ("flooding", "broadcast", "broadcast_exchange"):
-            pol = make_policy(spec.protocol, overlay.subgraph(members))
-        else:
+        def build() -> CommPolicy:
+            if spec.protocol in ("flooding", "broadcast", "broadcast_exchange"):
+                return make_policy(spec.protocol, overlay.subgraph(members))
             plan = self.member_plan(spec, members, overlay)
             mst, colors = plan.member_mst()
             if spec.coloring_algorithm != "jones_plassmann":
                 colors = color_graph(mst, spec.coloring_algorithm)
-            pol = make_policy(spec.protocol, mst, mst=mst, colors=colors,
-                              n_segments=spec.n_segments)
-        self._policies[key] = pol
-        return pol
+            return make_policy(spec.protocol, mst, mst=mst, colors=colors,
+                               n_segments=spec.n_segments)
+
+        return self._memo("policy", self._policies,
+                          policy_key(spec, members), build)
 
     def trajectory(self, spec: "ScenarioSpec", build) -> list:
         """Cached membership trajectory: ``(round, moderator, members,
@@ -278,15 +281,21 @@ class PlanCache:
         member subgraph via :meth:`subgraph` so hits never need a moderator.
         """
         key = (overlay_fingerprint(spec), spec.rounds, spec.churn)
-        traj = self._trajectories.get(key)
-        if traj is None:
-            self.counters["trajectory_misses"] += 1
-            traj = self._trajectories[key] = build()
-        else:
-            self.counters["trajectory_hits"] += 1
-        return traj
+        return self._memo("trajectory", self._trajectories, key, build)
 
     # -- accounting ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, int]:
+        """An immutable copy of the per-stage counters, cheap enough to take
+        per scenario — the obs layer diffs entry/exit snapshots into each
+        result's RunReport cache delta."""
+        return dict(self.counters)
+
+    def reset(self) -> None:
+        """Zero the counters in place; cached artifacts are kept (resetting
+        accounting between sweep phases must not force rebuilds)."""
+        for k in self.counters:
+            self.counters[k] = 0
+
     def stats(self) -> Dict[str, int]:
         out = dict(self.counters)
         out["unique_overlays"] = len(self._overlays)

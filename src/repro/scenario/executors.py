@@ -60,6 +60,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type, U
 
 import numpy as np
 
+from .. import obs
 from ..compress import per_send_wire_mb
 from ..core.gossip import GossipEngine
 from ..core.graph import Graph
@@ -416,22 +417,58 @@ class Executor:
         self.spec = spec
         self.record_trace = record_trace
         self.cache = plan_cache if plan_cache is not None else PlanCache()
+        # observability: one attribute check when disabled; when a recorder
+        # is active, per-epoch plan spans + per-round spans land on this
+        # executor's lane and the run's counter/cache deltas become the
+        # result's RunReport
+        rec = obs.get()
+        mark = (obs.capture_mark(rec, self.cache.snapshot())
+                if rec.enabled else None)
         self.overlay = self.cache.overlay(spec)
         self.payload_mb = spec.payload_mb()
         self.codec = spec.codec_obj()
         self.begin()
         reports: List[RoundReport] = []
         epoch: Optional[Tuple[int, ...]] = None
+        track = f"exec/{self.name}"
         for r, mod, members, applied in membership_rounds(spec, self.overlay):
             mt = tuple(members)
             if mt != epoch:
-                self.begin_epoch(mod, mt)
+                if rec.enabled:
+                    with rec.span(f"epoch r{r}", cat="plan", track=track,
+                                  scenario=spec.name, members=len(mt)):
+                        self.begin_epoch(mod, mt)
+                else:
+                    self.begin_epoch(mod, mt)
                 epoch = mt
-            reports.append(self.run_round(
-                RoundContext(r, mod.moderator_id, mt, applied, spec)))
-        return self.finish(ScenarioResult(
+            rctx = RoundContext(r, mod.moderator_id, mt, applied, spec)
+            if rec.enabled:
+                with rec.span(f"round {r}", cat="round", track=track,
+                              scenario=spec.name, round=r):
+                    reports.append(self.run_round(rctx))
+            else:
+                reports.append(self.run_round(rctx))
+        result = self.finish(ScenarioResult(
             scenario=spec.name, executor=self.name, protocol=spec.protocol,
             payload_mb=self.payload_mb, rounds=reports, spec=spec.to_dict()))
+        if rec.enabled:
+            self._observe(rec, mark, result)
+        return result
+
+    def _observe(self, rec, mark: Dict[str, Any],
+                 result: ScenarioResult) -> None:
+        """Tally the run's byte/traffic counters (after :meth:`finish`, so
+        executors that back-fill reports — the event engine — are counted
+        correctly) and attach the RunReport delta to the result."""
+        for rep in result.rounds:
+            rec.count("bytes.payload_mb", rep.bytes_mb)
+            rec.count("bytes.wire_mb", rep.bytes_on_wire_mb)
+            rec.count("transmissions", rep.transmissions)
+            rec.count("slots", rep.n_slots)
+            if rep.drops:
+                rec.count("drops", rep.drops)
+        result.report = obs.build_report(
+            rec, mark, self.cache.snapshot()).to_dict()
 
     # -- sweep integration ---------------------------------------------------
     def run_cells(self, cells, plan_cache: Optional[PlanCache] = None,
@@ -546,6 +583,18 @@ class PlanExecutor(Executor):
         stats come from the cache (computed once per unique key), then every
         (cell, round) row's byte accounting is one vectorized numpy sweep.
         """
+        rec = obs.get()
+        if rec.enabled:
+            # with a recorder active, per-cell attribution (epoch/round
+            # spans, per-cell RunReports) matters more than the batched
+            # numpy fast path — and serial-vs-batched is bit-identical, so
+            # only wall time differs. Disabled runs take the vectorized
+            # pass below with zero instrumentation in the loop.
+            cells = list(cells)
+            with rec.span(f"run_cells x{len(cells)}", cat="sweep",
+                          track="exec/plan"):
+                return Executor.run_cells(self, cells, plan_cache=plan_cache,
+                                          record_trace=record_trace)
         cache = plan_cache if plan_cache is not None else PlanCache()
         wire_memo: Dict[Tuple[str, float, float], float] = {}
         est_memo: Dict[Tuple[int, float], Any] = {}
@@ -677,6 +726,7 @@ class NetsimExecutor(Executor):
 
     def begin(self) -> None:
         self._sims: List = []
+        self._virt_t = 0.0  # cumulative virtual clock across rounds (obs)
 
     def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
         super().begin_epoch(mod, members)
@@ -688,7 +738,9 @@ class NetsimExecutor(Executor):
 
     def run_round(self, rctx: RoundContext) -> RoundReport:
         sim = simulate_policy(self.policy, self._testbed, self.payload_mb,
-                              record_trace=self.record_trace, codec=self.codec)
+                              record_trace=self.record_trace, codec=self.codec,
+                              span_offset=self._virt_t)
+        self._virt_t += sim.total_time_s
         self._sims.append(sim)
         tx = sim.n_transfers
         return rctx.report(
@@ -825,9 +877,14 @@ class EventExecutor(Executor):
         from ..core.events import AsyncEventEngine
 
         spec = self.spec
+        # the event log is on when any consumer wants it: the legacy
+        # record_trace knob, the spec's declared record_events field, or an
+        # active observability recorder (which needs the per-link lanes)
         self._engine = AsyncEventEngine(
             max_staleness=spec.max_staleness, drop_rate=spec.drop_rate,
-            drop_seed=spec.drop_seed, record_events=self.record_trace)
+            drop_seed=spec.drop_seed,
+            record_events=(self.record_trace or spec.record_events
+                           or obs.get().enabled))
         self._pending: List[Tuple[RoundReport, float, float]] = []
 
     def begin_epoch(self, mod: Moderator, members: Tuple[int, ...]) -> None:
@@ -855,6 +912,7 @@ class EventExecutor(Executor):
 
     def finish(self, result: ScenarioResult) -> ScenarioResult:
         timings = self._engine.run()
+        rec = obs.get()
         prev_completed = 0.0
         for (report, wire_mb, fraction), rt in zip(self._pending, timings):
             tx = rt.attempts
@@ -867,6 +925,16 @@ class EventExecutor(Executor):
             report.bytes_mb = tx * self.payload_mb * fraction
             report.bytes_on_wire_mb = float(sum([wire_mb] * tx))
             report.total_time_s = rt.completed_s - prev_completed
+            if rec.enabled:
+                # the round's virtual-time span: the inter-completion gap,
+                # so per-round span durations sum exactly to the scenario's
+                # total_time_s (the obs acceptance invariant)
+                rec.add_span(f"round {report.round}", prev_completed,
+                             rt.completed_s, track="rounds", cat="event-round",
+                             args={"round": report.round,
+                                   "total_time_s": report.total_time_s,
+                                   "admitted_at_s": rt.admitted_s,
+                                   "attempts": tx, "drops": rt.drops})
             prev_completed = rt.completed_s
             report.mean_transfer_s = rt.mean_transfer_s()
             report.mean_bandwidth_mbps = rt.mean_bandwidth_mbps()
@@ -877,6 +945,13 @@ class EventExecutor(Executor):
                 # membership changes take effect when the staleness window
                 # admits the round — a virtual timestamp, not a round count
                 ev["applied_at_s"] = rt.admitted_s
+        if rec.enabled:
+            # per-node and per-link virtual lanes from the engine's event log
+            for s in self._engine.virtual_spans():
+                rec.add_span(s["name"], s["t0"], s["t1"], track=s["track"],
+                             cat=s["cat"], args=s["args"])
+            rec.count("event.retries", sum(rt.drops for rt in timings))
+            rec.gauge("event.makespan_s", prev_completed)
         return result
 
 

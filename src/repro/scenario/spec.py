@@ -161,6 +161,13 @@ class ScenarioSpec:
     # round r+1 once round r-k completes, so fast nodes pipeline ahead of
     # stragglers by up to k rounds.
     max_staleness: int = 0
+    # Keep the event engine's full virtual-time event log (admissions,
+    # milestones, deliveries, retries, per-link transfer intervals) so the
+    # observability layer can export per-node/per-link Perfetto lanes.
+    # Sweep-safe: a declared field, serialized and validated like any other,
+    # not an engine-only constructor knob. Off by default — recording
+    # allocates per-transfer tuples on the hot path.
+    record_events: bool = False
     # Per-node local compute before each round's first transmission (the
     # straggler model): every node pays ``compute_time_s`` plus a seeded
     # uniform draw in [0, compute_jitter_s) redrawn per (round, node).
@@ -232,6 +239,8 @@ class ScenarioSpec:
             raise ValueError("drop_rate must be in [0, 1)")
         if self.max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
+        if not isinstance(self.record_events, bool):
+            raise ValueError("record_events must be a bool")
         if self.compute_time_s < 0:
             raise ValueError("compute_time_s must be >= 0")
         if self.compute_jitter_s < 0:
@@ -292,6 +301,7 @@ class ScenarioSpec:
             "drop_rate": self.drop_rate,
             "drop_seed": self.drop_seed,
             "max_staleness": self.max_staleness,
+            "record_events": self.record_events,
             "compute_time_s": self.compute_time_s,
             "compute_jitter_s": self.compute_jitter_s,
             "jitter_seed": self.jitter_seed,
@@ -346,6 +356,10 @@ class ScenarioResult:
     payload_mb: float
     rounds: List[RoundReport]
     spec: Dict[str, Any] = field(default_factory=dict)
+    # observability rollup (repro.obs.RunReport.to_dict()), attached only
+    # when a recorder was active during the run — None keeps to_dict()
+    # byte-identical to the pre-instrumentation shape
+    report: Optional[Dict[str, Any]] = None
     # raw fluid-sim results (netsim executor only; not serialized)
     sim_results: List[SimResult] = field(default_factory=list, repr=False)
 
@@ -393,6 +407,7 @@ class ScenarioResult:
             },
             "rounds_detail": [r.to_dict() for r in self.rounds],
             "spec": self.spec,
+            **({"report": self.report} if self.report is not None else {}),
         }
 
     def to_json(self, **kwargs) -> str:

@@ -286,7 +286,16 @@ class SweepResult:
             out[axis] = rows
         return out
 
+    def reports(self) -> Optional[List[Dict[str, Any]]]:
+        """Per-cell observability RunReports (``{"cell": i, **report}``), or
+        ``None`` when the grid ran without an active recorder."""
+        if all(c.result.report is None for c in self.cells):
+            return None
+        return [{"cell": c.index, **(c.result.report or {})}
+                for c in self.cells]
+
     def to_dict(self) -> Dict[str, Any]:
+        reports = self.reports()
         return {
             "sweep": self.sweep,
             "executor": self.executor,
@@ -296,6 +305,9 @@ class SweepResult:
             "cells": self.table(),
             "marginals": self.marginals(),
             "cache": self.cache_stats,
+            # only materialized when a recorder was active — absent keys keep
+            # pre-instrumentation sweep JSON byte-identical
+            **({"reports": reports} if reports is not None else {}),
         }
 
     def to_json(self, **kwargs) -> str:

@@ -1,0 +1,440 @@
+"""Unified observability layer: spans, traces, reports, and the contracts.
+
+Pins the PR-8 tentpole properties:
+  * the recorder is a true zero-overhead switch: with observability off the
+    scenario/sweep outputs are byte-identical to the pre-instrumentation
+    shapes (``BENCH_netsim.json``, the ``table3_full`` sweep) and the
+    batched counting fast path is untouched,
+  * with observability on, results are unchanged except for the attached
+    ``report`` key, and the Chrome-trace export is schema-valid,
+  * the event executor's virtual-time round spans sum exactly to the
+    engine's reported ``total_time_s`` (the trace *is* the timeline),
+  * ``PlanCache.snapshot()``/``reset()`` and the structural accounting
+    invariant (every lookup increments exactly one of hits/misses),
+  * ``estimate_timing`` warns (``TimingContractWarning``) on hub-heavy
+    event-mode overlays — the documented 384-cell outlier shape — and stays
+    silent on regular families,
+  * ``bench_diff`` flags drift outside its tolerance bands and ignores
+    wall-clock keys.
+"""
+import json
+import pathlib
+import sys
+import time
+import warnings
+
+import pytest
+
+from repro import obs
+from repro.core.graph import TopologySpec, make_topology
+from repro.core.network import TimingContractWarning, estimate_timing
+from repro.core.plan import make_policy
+from repro.scenario import ScenarioSpec, SweepSpec, run_scenario, run_sweep, scenarios
+from repro.scenario.cache import PlanCache
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_recorder():
+    """Every test starts and ends with observability off."""
+    assert obs.get() is obs.NULL_RECORDER
+    yield
+    obs.set_recorder(None)
+
+
+def _bench_module(name):
+    sys.path.insert(0, str(ROOT / "benchmarks"))
+    try:
+        return __import__(name)
+    finally:
+        sys.path.pop(0)
+
+
+class TestRecorder:
+    def test_null_recorder_is_inert(self):
+        rec = obs.get()
+        assert rec is obs.NULL_RECORDER
+        assert not rec.enabled
+        with rec.span("x", cat="c", track="t"):
+            pass
+        rec.add_span("x", 0.0, 1.0)
+        rec.count("n")
+        rec.gauge("g", 1.0)
+        rec.sample("s", 0.0, 1.0)
+        assert not hasattr(rec, "spans")  # nothing accumulates
+
+    def test_spans_counters_gauges(self):
+        with obs.recording(obs.Recorder()) as rec:
+            with rec.span("outer", cat="a", track="exec/t"):
+                with rec.span("inner", cat="a", track="exec/t", k=1):
+                    time.sleep(0.001)
+            rec.add_span("virtual", 2.0, 5.0, track="node/0", cat="v")
+            rec.count("x")
+            rec.count("x", 2.0)
+            rec.gauge("r", 0.5)
+        assert obs.get() is obs.NULL_RECORDER  # scoped install restored
+        names = [s.name for s in rec.spans]
+        assert names == ["inner", "outer", "virtual"]  # closed innermost-first
+        inner, outer, virt = rec.spans
+        assert outer.t0 <= inner.t0 and inner.t1 <= outer.t1  # containment
+        assert virt.duration_s == pytest.approx(3.0)
+        assert rec.counters == {"x": 3.0}
+        assert rec.gauges == {"r": 0.5}
+        rollup = rec.spans_by_cat()
+        assert rollup["a"]["spans"] == 2
+        assert rollup["v"]["total_s"] == pytest.approx(3.0)
+
+    def test_set_recorder_returns_previous(self):
+        rec = obs.Recorder()
+        prev = obs.set_recorder(rec)
+        try:
+            assert prev is obs.NULL_RECORDER
+            assert obs.get() is rec
+        finally:
+            assert obs.set_recorder(None) is rec
+        assert obs.get() is obs.NULL_RECORDER
+
+
+class TestTraceExport:
+    def test_chrome_trace_schema_valid(self):
+        with obs.recording(obs.Recorder()) as rec:
+            run_scenario(scenarios.get("async_stragglers"), executor="event")
+        obj = obs.chrome_trace(rec)
+        obs.validate_trace(obj)  # must not raise
+        phases = {ev["ph"] for ev in obj["traceEvents"]}
+        assert phases <= {"X", "M", "C"}
+        # track grouping: the engine's node/link lanes become processes
+        procs = {ev["args"]["name"] for ev in obj["traceEvents"]
+                 if ev["ph"] == "M" and ev["name"] == "process_name"}
+        assert {"node", "link", "run", "exec"} <= procs
+
+    def test_validate_trace_rejects_garbage(self):
+        with pytest.raises(ValueError, match="traceEvents"):
+            obs.validate_trace({})
+        bad_phase = {"traceEvents": [
+            {"name": "x", "ph": "Z", "pid": 1, "tid": 1, "ts": 0}]}
+        with pytest.raises(ValueError, match="phase"):
+            obs.validate_trace(bad_phase)
+        neg_dur = {"traceEvents": [
+            {"name": "x", "ph": "X", "pid": 1, "tid": 1, "ts": 0, "dur": -1}]}
+        with pytest.raises(ValueError, match="dur"):
+            obs.validate_trace(neg_dur)
+        nan = {"traceEvents": [], "otherData": {"v": float("nan")}}
+        with pytest.raises(ValueError, match="strict JSON"):
+            obs.validate_trace(nan)
+
+    def test_write_trace_roundtrips(self, tmp_path):
+        with obs.recording(obs.Recorder()) as rec:
+            with rec.span("s", cat="c"):
+                pass
+            rec.sample("q", 0.5, 2.0)
+        path = tmp_path / "trace.json"
+        obj = obs.write_trace(rec, str(path))
+        loaded = json.loads(path.read_text())
+        assert loaded == obj
+        obs.validate_trace(loaded)
+
+
+class TestVirtualTimeline:
+    def test_round_spans_sum_to_total_time(self):
+        """The acceptance invariant: the event executor's per-round virtual
+        spans partition [0, makespan] and sum to the reported total."""
+        spec = scenarios.get("async_stragglers")
+        with obs.recording(obs.Recorder()) as rec:
+            res = run_scenario(spec, executor="event")
+        rounds = [s for s in rec.spans if s.track == "rounds"]
+        assert len(rounds) == spec.rounds
+        total = sum(s.duration_s for s in rounds)
+        assert total == pytest.approx(res.total_time_s, rel=1e-12)
+        # contiguous coverage: each round starts where the previous ended
+        for a, b in zip(rounds, rounds[1:]):
+            assert b.t0 == pytest.approx(a.t1)
+        # per-node lanes live inside the makespan
+        node_spans = [s for s in rec.spans if s.track.startswith("node/")]
+        assert node_spans
+        makespan = max(s.t1 for s in rounds)
+        assert all(-1e-9 <= s.t0 and s.t1 <= makespan + 1e-9
+                   for s in node_spans)
+        # per-link lanes exist and carry round/slot attribution
+        link_spans = [s for s in rec.spans if s.track.startswith("link/")]
+        assert link_spans
+        assert all({"round", "slot"} <= set(s.args) for s in link_spans)
+
+    def test_netsim_slot_spans_cover_round(self):
+        spec = scenarios.get("paper_table3")
+        with obs.recording(obs.Recorder()) as rec:
+            res = run_scenario(spec, executor="netsim")
+        slots = [s for s in rec.spans if s.cat == "netsim-slot"]
+        assert slots
+        assert max(s.t1 for s in slots) == pytest.approx(res.total_time_s)
+
+
+class TestZeroOverhead:
+    def test_bench_netsim_byte_identical(self):
+        """With observability off the smoke bench reproduces the committed
+        pre-instrumentation BENCH_netsim.json byte-for-byte."""
+        bench = _bench_module("gossip_traffic").netsim_bench()
+        committed = (ROOT / "BENCH_netsim.json").read_text()
+        assert json.dumps(bench, indent=2) == committed
+
+    def test_table3_sweep_identical_modulo_report(self):
+        sweep = scenarios.get_sweep("table3_full")
+        off = run_sweep(sweep, executor="plan").to_dict()
+        with obs.recording(obs.Recorder()):
+            on = run_sweep(sweep, executor="plan").to_dict()
+        assert "reports" not in off  # disabled output has no new keys
+        reports = on.pop("reports")
+        assert len(reports) == off["n_cells"]
+        # cache accounting differs by construction: recording reroutes the
+        # batched pass to the serial per-cell path, whose nested lookups
+        # (subgraph/trajectory) are memoized at different granularity
+        on.pop("cache"), off.pop("cache")
+        assert on == off
+
+    def test_scenario_identical_modulo_report(self):
+        spec = scenarios.get("paper_table3")
+        off = run_scenario(spec, executor="netsim").to_dict()
+        with obs.recording(obs.Recorder()):
+            on = run_scenario(spec, executor="netsim").to_dict()
+        assert "report" not in off
+        report = on.pop("report")
+        assert on == off
+        assert report["bytes"]["payload_mb"] == pytest.approx(
+            off["totals"]["bytes_mb"])
+
+    def test_batched_fast_path_not_regressed(self):
+        """The plan executor's batched counting pass must stay well clear of
+        the serial loop with instrumentation present but disabled (the <5%
+        regression budget, asserted via the bench's own 5x speedup floor
+        with margin for CI noise)."""
+        grid = SweepSpec(
+            name="guard",
+            base=ScenarioSpec(
+                overlay=TopologySpec(kind="watts_strogatz", n=200, seed=1),
+                protocol="dissemination", rounds=1),
+            grid={"payload": ("v3s", "v2", "b0", 50.0),
+                  "codec": ("fp32", "bf16", "int8", "int4")})
+        cells = grid.cells()
+        t0 = time.perf_counter()
+        serial = [run_scenario(c.spec, executor="plan") for c in cells]
+        t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        swept = run_sweep(grid, executor="plan")
+        t_sweep = time.perf_counter() - t0
+        assert [s.to_dict() for s in serial] == \
+            [c.result.to_dict() for c in swept.cells]
+        assert t_serial / t_sweep > 3.0
+
+    def test_recording_reroutes_to_serial_and_agrees(self):
+        """When a recorder is installed the plan executor trades the batched
+        pass for per-cell attribution — results must not change."""
+        sweep = scenarios.get_sweep("table3_full")
+        off = run_sweep(sweep, executor="plan")
+        with obs.recording(obs.Recorder()) as rec:
+            on = run_sweep(sweep, executor="plan")
+        for a, b in zip(off.cells, on.cells):
+            d = b.result.to_dict()
+            d.pop("report", None)
+            assert a.result.to_dict() == d
+        assert any(s.cat == "sweep" for s in rec.spans)
+
+
+class TestPlanCacheAccounting:
+    STAGES = ("overlay", "subgraph", "policy", "measure", "slots", "timing",
+              "trajectory", "replan")
+
+    def test_snapshot_is_immutable_copy(self):
+        cache = PlanCache()
+        snap = cache.snapshot()
+        run_scenario(scenarios.get("paper_table3"), executor="plan",
+                     plan_cache=cache)
+        assert snap != cache.snapshot()  # the copy did not track mutation
+        assert all(v == 0 for v in snap.values())
+
+    def test_every_lookup_hits_or_misses(self):
+        """The structural accounting invariant: on a cold cache every built
+        artifact is exactly one miss; on a warm cache identical specs never
+        miss (nested stages may be skipped entirely on a hit upstream)."""
+        cache = PlanCache()
+        spec = scenarios.get("paper_table3")
+        run_scenario(spec, executor="plan", plan_cache=cache)
+        first = cache.snapshot()
+        stats = cache.stats()
+        assert first["overlay_misses"] == stats["unique_overlays"]
+        assert first["policy_misses"] == stats["unique_policies"]
+        assert first["timing_misses"] == stats["unique_timing_profiles"]
+        run_scenario(spec, executor="plan", plan_cache=cache)
+        second = {k: v - first[k] for k, v in cache.snapshot().items()}
+        touched = [s for s in self.STAGES
+                   if second[f"{s}_hits"] + second[f"{s}_misses"]]
+        assert touched  # the warm run did look things up
+        for stage in self.STAGES:
+            assert second[f"{stage}_misses"] == 0, stage
+
+    def test_reset_zeroes_counters_keeps_artifacts(self):
+        cache = PlanCache()
+        spec = scenarios.get("paper_table3")
+        run_scenario(spec, executor="plan", plan_cache=cache)
+        assert any(cache.snapshot().values())
+        cache.reset()
+        assert all(v == 0 for v in cache.snapshot().values())
+        run_scenario(spec, executor="plan", plan_cache=cache)
+        after = cache.snapshot()
+        # artifacts survived the reset: the re-run never rebuilds
+        assert all(after[f"{s}_misses"] == 0 for s in self.STAGES)
+
+    def test_report_carries_cache_delta(self):
+        cache = PlanCache()
+        spec = scenarios.get("paper_table3")
+        with obs.recording(obs.Recorder()):
+            res = run_scenario(spec, executor="plan", plan_cache=cache)
+        delta = res.report["cache"]
+        assert delta  # cold cache: misses attributed to this scenario
+        assert all(v > 0 for v in delta.values())
+        assert delta == {k: v for k, v in cache.snapshot().items() if v}
+
+
+class TestTimingContractWarning:
+    def _estimate(self, kind, n, seed):
+        g = make_topology(TopologySpec(kind=kind, n=n, seed=seed))
+        pol = make_policy("flooding", g)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            est = estimate_timing(pol, "wan", 1e6)
+        fired = [w for w in caught
+                 if issubclass(w.category, TimingContractWarning)]
+        return est, fired
+
+    @pytest.mark.parametrize("n", (8, 10, 12, 16))
+    def test_fires_on_ba_outlier_shapes(self, n):
+        """The documented 384-cell grid outlier: flooding over hub-heavy
+        barabasi_albert overlays is out of the ±15% contract."""
+        for seed in range(6):
+            est, fired = self._estimate("barabasi_albert", n, seed)
+            assert fired, f"n={n} seed={seed}"
+            assert est.contract_warning is not None
+            assert "hub-heavy" in est.contract_warning
+
+    @pytest.mark.parametrize("kind", ("watts_strogatz", "complete"))
+    def test_silent_on_regular_families(self, kind):
+        for n in (8, 10, 12, 16):
+            for seed in range(6):
+                est, fired = self._estimate(kind, n, seed)
+                assert not fired, f"{kind} n={n} seed={seed}"
+                assert est.contract_warning is None
+
+    def test_silent_on_slot_sync(self):
+        """mosgu runs slot-synchronous — inside the contract even on BA."""
+        g = make_topology(TopologySpec(kind="barabasi_albert", n=10, seed=0))
+        pol = make_policy("mosgu", g)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            est = estimate_timing(pol, "wan", 1e6)
+        assert not caught
+        assert est.contract_warning is None
+
+    def test_warning_counted_when_recording(self):
+        g = make_topology(TopologySpec(kind="barabasi_albert", n=10, seed=0))
+        pol = make_policy("flooding", g)
+        with obs.recording(obs.Recorder()) as rec:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", TimingContractWarning)
+                estimate_timing(pol, "wan", 1e6)
+        assert rec.counters.get("timing.contract_warnings") == 1.0
+        assert rec.gauges["timing.hub_skew"] > 1.5
+
+
+class TestScenarioSpecRecordEvents:
+    def test_validated_and_serialized(self):
+        spec = scenarios.get("async_stragglers")
+        assert spec.record_events is False
+        on = spec.replace(record_events=True)
+        on.validate()
+        assert on.to_dict()["record_events"] is True
+        assert spec.to_dict()["record_events"] is False
+        with pytest.raises(ValueError, match="record_events"):
+            spec.replace(record_events=1).validate()
+
+    def test_drives_event_executor_log(self):
+        from repro.scenario.executors import EventExecutor
+
+        spec = scenarios.get("async_stragglers").replace(record_events=True)
+        ex = EventExecutor()
+        ex.execute(spec)
+        assert ex._engine.record_events
+        assert ex._engine.transfers  # the transfer log was captured
+        off = EventExecutor()
+        off.execute(scenarios.get("async_stragglers"))
+        assert not off._engine.record_events
+
+
+class TestRunReport:
+    def test_event_scenario_report_shape(self):
+        with obs.recording(obs.Recorder()):
+            res = run_scenario(scenarios.get("async_stragglers"),
+                               executor="event")
+        rep = res.report
+        assert rep["bytes"]["wire_mb"] > 0
+        assert rep["counters"]["transmissions"] == res.total_transmissions
+        assert "event-round" in rep["phases"]
+        assert rep["gauges"]["event.makespan_s"] == pytest.approx(
+            res.total_time_s)
+
+    def test_sweep_aggregates_per_cell(self):
+        sweep = scenarios.get_sweep("table3_full")
+        with obs.recording(obs.Recorder()):
+            result = run_sweep(sweep, executor="plan")
+        reports = result.reports()
+        assert reports is not None and len(reports) == len(result.cells)
+        assert [r["cell"] for r in reports] == list(range(len(result.cells)))
+        assert all("bytes" in r and "counters" in r for r in reports)
+        # serialization carries them; the disabled path stays key-identical
+        assert "reports" in result.to_dict()
+
+    def test_codec_metrics_surface(self):
+        spec = scenarios.get("paper_table3").replace(codec="int8")
+        with obs.recording(obs.Recorder()) as rec:
+            run_scenario(spec, executor="engine")
+        assert rec.counters["codec.encodes"] > 0
+        assert 0.0 < rec.gauges["codec.ratio.int8"] < 0.5
+
+
+class TestBenchDiff:
+    def test_gate_green_on_committed_baselines(self):
+        bd = _bench_module("bench_diff")
+        baselines = ROOT / "benchmarks" / "baselines"
+        assert (baselines / "BENCH_netsim.json").exists()
+        base = json.loads((baselines / "BENCH_netsim.json").read_text())
+        assert bd.diff_tree(base, base) == []
+
+    def test_detects_drift_and_respects_tolerance(self):
+        bd = _bench_module("bench_diff")
+        base = {"protocols": {"mosgu": {"slots": 22, "total_time_s": 104.42,
+                                        "wall_s": 1.0}}}
+        ok = {"protocols": {"mosgu": {"slots": 22,
+                                      "total_time_s": 104.42 * (1 + 1e-8),
+                                      "wall_s": 99.0}}}
+        assert bd.diff_tree(base, ok) == []  # band + wall-clock ignore
+        drift = {"protocols": {"mosgu": {"slots": 23, "total_time_s": 110.0,
+                                         "wall_s": 1.0}}}
+        rows = bd.diff_tree(base, drift)
+        assert {r[0] for r in rows} == {"protocols.mosgu.slots",
+                                        "protocols.mosgu.total_time_s"}
+        missing = {"protocols": {"mosgu": {"slots": 22, "wall_s": 1.0}}}
+        rows = bd.diff_tree(base, missing)
+        assert rows == [("protocols.mosgu.total_time_s", 104.42, None,
+                         "missing")]
+
+    def test_main_gates_and_reblesses(self, tmp_path, capsys):
+        bd = _bench_module("bench_diff")
+        cur = tmp_path / "cur"
+        basedir = tmp_path / "base"
+        cur.mkdir(), basedir.mkdir()
+        (cur / "BENCH_x.json").write_text(json.dumps({"slots": 22}))
+        (basedir / "BENCH_x.json").write_text(json.dumps({"slots": 21}))
+        argv = ["--current-dir", str(cur), "--baseline-dir", str(basedir)]
+        assert bd.main(argv) == 1  # drift
+        assert bd.main(argv + ["--update"]) == 0  # rebless
+        assert bd.main(argv) == 0  # now green
+        capsys.readouterr()
