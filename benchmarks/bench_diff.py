@@ -35,6 +35,7 @@ IGNORE_KEYS = frozenset({
     "wall_s", "serial_s", "sweep_s", "netsim_s", "plan_s",
     "dense_s", "csr_s", "full_s", "replan_s", "time_s",
     "speedup", "speedup_x", "speedup_vs_fp32",
+    "evals_per_s", "per_eval_ms",
 })
 
 #: (key, relative tolerance) — metrics allowed a band wider than exact.
@@ -54,6 +55,9 @@ TOLERANCE_BANDS = {
     "ratio": 1e-6,
     "min_ratio": 1e-6,
     "max_ratio": 1e-6,
+    "mst_s": 1e-6,
+    "opt_s": 1e-6,
+    "best_score": 1e-6,
 }
 DEFAULT_REL_TOL = 1e-9
 

@@ -28,7 +28,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import json
 import sys
-import time
 
 OUT = "experiments/perf"
 
@@ -104,68 +103,19 @@ def run_overlay(n: int = 2000, rounds: int = 4, pool: int = 32,
                 timed_refs: int = 4, seed: int = 0) -> dict:
     """Greedy membership hillclimb through the incremental replanner.
 
-    Each round scores ``pool`` candidate single-member evictions (keeping
-    the member subgraph connected) by replanned MST cost and commits the
-    best one. ``timed_refs`` candidates per round are also rebuilt from
-    scratch to measure the per-edit speedup the replanner buys; the
-    rebuild result double-checks ``plan_equal`` on the way.
+    Thin wrapper over :func:`repro.opt.membership_descent` — the edit
+    scoring, the ``plan_equal`` double-checks on timed full-rebuild
+    references, and the speedup accounting all live in the library; this
+    pair only picks the k-NN overlay and writes the JSON artifact.
     """
-    import numpy as np
-
     from repro.core.graph import TopologySpec, make_topology
-    from repro.core.replan import SparsePlanner, plan_equal
+    from repro.opt import membership_descent
 
     g = make_topology(TopologySpec(kind="knn", n=n, seed=seed, k=8,
                                    n_subnets=max(1, n // 100)))
-    planner = SparsePlanner(g, seed=seed)
-    members = list(range(n))
-    plan = planner.plan(members)
-    rng = np.random.default_rng(seed)
-    replan_s = full_s = 0.0
-    n_edits = n_refs = 0
-    trail = []
-    for r in range(rounds):
-        cands = rng.choice(plan.members, size=min(pool, len(members) - 2),
-                           replace=False)
-        best = None
-        ref_picks = set(int(x) for x in cands[:timed_refs])
-        for v in cands:
-            v = int(v)
-            trial = [m for m in members if m != v]
-            t0 = time.time()
-            try:
-                cand_plan = planner.replan(plan, trial)
-            except ValueError:
-                continue  # eviction disconnects the overlay: not a move
-            replan_s += time.time() - t0
-            n_edits += 1
-            if v in ref_picks:
-                t0 = time.time()
-                ref = planner.plan(trial)
-                full_s += time.time() - t0
-                n_refs += 1
-                assert plan_equal(cand_plan, ref)
-            if best is None or cand_plan.tree_cost() < best[1].tree_cost():
-                best = (v, cand_plan)
-        if best is None:
-            break
-        members = [m for m in members if m != best[0]]
-        plan = best[1]
-        trail.append({"round": r, "evicted": best[0],
-                      "tree_cost": round(plan.tree_cost(), 3)})
-        print(f"[overlay] round {r}: evicted {best[0]}, "
-              f"tree cost {plan.tree_cost():.3f}")
-    per_edit_replan = replan_s / max(1, n_edits)
-    per_edit_full = full_s / max(1, n_refs)
-    speedup = per_edit_full / per_edit_replan if per_edit_replan else 0.0
-    result = {
-        "n": n, "rounds": len(trail), "candidates_scored": n_edits,
-        "full_rebuild_refs": n_refs,
-        "per_edit_replan_ms": round(per_edit_replan * 1e3, 3),
-        "per_edit_full_ms": round(per_edit_full * 1e3, 3),
-        "per_edit_speedup": round(speedup, 1),
-        "trail": trail,
-    }
+    result = membership_descent(
+        g, rounds=rounds, pool=pool, timed_refs=timed_refs, seed=seed,
+        log=lambda msg: print(f"[overlay] {msg}"))
     print(f"[overlay] per-edit replan {result['per_edit_replan_ms']}ms vs "
           f"full rebuild {result['per_edit_full_ms']}ms: "
           f"{result['per_edit_speedup']}x")

@@ -1,0 +1,45 @@
+"""Adaptive overlay optimization: analytic-cost-guided topology search.
+
+The subsystem the ROADMAP names as "adaptive / learned overlays using the
+analytic model as a cost oracle": a seeded, deterministic edit-based search
+over overlay topologies where every candidate is scored by the closed-form
+timing/throughput oracle (:mod:`repro.core.network`) via exact incremental
+plan maintenance — never a full plan rebuild, never a simulator run in the
+inner loop. See DESIGN.md §16.
+"""
+from .membership import membership_descent
+from .objective import (
+    OBJECTIVES,
+    EvalContext,
+    Objective,
+    context_for_scenario,
+    make_objective,
+)
+from .search import (
+    MOVE_KINDS,
+    STRATEGIES,
+    OptimizeResult,
+    OptimizerSpec,
+    optimize_for_scenario,
+    optimize_overlay,
+    reoptimize,
+)
+from .state import Candidate, SearchState
+
+__all__ = [
+    "MOVE_KINDS",
+    "OBJECTIVES",
+    "STRATEGIES",
+    "Candidate",
+    "EvalContext",
+    "Objective",
+    "OptimizeResult",
+    "OptimizerSpec",
+    "SearchState",
+    "context_for_scenario",
+    "make_objective",
+    "membership_descent",
+    "optimize_for_scenario",
+    "optimize_overlay",
+    "reoptimize",
+]

@@ -54,8 +54,19 @@ if TYPE_CHECKING:  # pragma: no cover
 PolicyKey = Tuple[Any, ...]
 
 
+def _base_overlay_fingerprint(spec: "ScenarioSpec") -> Tuple[Any, ...]:
+    """Identity of the *declared* overlay alone (optimizer-blind) — the key
+    of the raw overlay-graph stage, which optimized and unoptimized cells
+    deliberately share."""
+    ov = spec.overlay
+    if isinstance(ov, TopologySpec):
+        return ("topo",) + _field_tuple(ov)
+    a = np.asarray(ov, dtype=np.float64)
+    return ("matrix", a.shape, a.tobytes())
+
+
 def overlay_fingerprint(spec: "ScenarioSpec") -> Tuple[Any, ...]:
-    """A hashable identity for a scenario's declared overlay.
+    """A hashable identity for a scenario's *effective* overlay.
 
     A :class:`TopologySpec` is identified by its field values (generation is
     deterministic given the spec); an explicit cost matrix by its exact
@@ -63,12 +74,23 @@ def overlay_fingerprint(spec: "ScenarioSpec") -> Tuple[Any, ...]:
     (Flat ``_field_tuple`` rather than ``dataclasses.astuple`` — the
     deepcopy recursion inside ``astuple`` dominated sweep-grid key
     building.)
+
+    When the spec declares an :class:`~repro.opt.OptimizerSpec`, the
+    executors run on the optimizer's working subgraph — which depends on the
+    optimizer fields *and* everything its objective prices (underlay,
+    protocol, segmentation, payload, codec, coloring). All of that is folded
+    into the fingerprint so downstream stages (subgraph, policy, member
+    plan, trajectory) can never collide with the unoptimized cell or with a
+    differently-optimized sibling in the same sweep.
     """
-    ov = spec.overlay
-    if isinstance(ov, TopologySpec):
-        return ("topo",) + _field_tuple(ov)
-    a = np.asarray(ov, dtype=np.float64)
-    return ("matrix", a.shape, a.tobytes())
+    base = _base_overlay_fingerprint(spec)
+    opt = spec.optimizer
+    if opt is None:
+        return base
+    return base + ("opt",) + _field_tuple(opt) + (
+        underlay_fingerprint(spec.testbed(), spec.n), spec.protocol,
+        spec.n_segments, str(spec.payload), spec.codec,
+        spec.coloring_algorithm)
 
 
 def policy_key(spec: "ScenarioSpec",
@@ -89,6 +111,7 @@ class PlanCache:
 
     def __init__(self) -> None:
         self._overlays: Dict[Tuple[Any, ...], Graph] = {}
+        self._opts: Dict[Tuple[Any, ...], Any] = {}
         self._subgraphs: Dict[Tuple[Any, ...], Graph] = {}
         self._policies: Dict[PolicyKey, CommPolicy] = {}
         self._measures: Dict[PolicyKey, Dict[str, float]] = {}
@@ -100,6 +123,7 @@ class PlanCache:
         self._latest_plan: Dict[Tuple[Any, ...], MemberPlan] = {}
         self.counters: Dict[str, int] = {
             "overlay_hits": 0, "overlay_misses": 0,
+            "opt_hits": 0, "opt_misses": 0,
             "subgraph_hits": 0, "subgraph_misses": 0,
             "policy_hits": 0, "policy_misses": 0,
             "measure_hits": 0, "measure_misses": 0,
@@ -139,8 +163,24 @@ class PlanCache:
 
     # -- stages --------------------------------------------------------------
     def overlay(self, spec: "ScenarioSpec") -> Graph:
-        return self._memo("overlay", self._overlays,
-                          overlay_fingerprint(spec), spec.overlay_graph)
+        """The scenario's *effective* overlay: the declared graph, or — when
+        ``spec.optimizer`` is set — the analytic-cost-optimized working
+        subgraph the ``opt`` stage builds over it (one search per unique
+        (overlay, optimizer, pricing-context) fingerprint; every executor
+        and sweep cell sharing the fingerprint reuses the result)."""
+        base = self._memo("overlay", self._overlays,
+                          _base_overlay_fingerprint(spec),
+                          spec.overlay_graph)
+        if spec.optimizer is None:
+            return base
+
+        def build():
+            from ..opt import optimize_for_scenario  # lazy: opt is optional
+
+            return optimize_for_scenario(spec, base_overlay=base).overlay
+
+        return self._memo("opt", self._opts, overlay_fingerprint(spec),
+                          build)
 
     def subgraph(self, spec: "ScenarioSpec", members: Tuple[int, ...],
                  build) -> Graph:

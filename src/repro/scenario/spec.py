@@ -44,6 +44,7 @@ from ..compress import CODEC_NAMES, Codec, make_codec
 from ..core.graph import Graph, TopologySpec, make_topology
 from ..core.netsim import SimResult, TestbedSpec
 from ..core.network import NETWORK_PRESETS, NetworkSpec, get_preset
+from ..opt import OptimizerSpec
 
 # Protocol names a scenario may declare (everything make_policy knows).
 SCENARIO_PROTOCOLS = (
@@ -181,6 +182,12 @@ class ScenarioSpec:
     require: Tuple[str, ...] = ()
     mst_algorithm: str = "prim"
     coloring_algorithm: str = "bfs"
+    # Adaptive overlay optimization (repro.opt): when set, the declared
+    # overlay is the edge *universe* and every executor runs on the
+    # analytic-cost-optimized working subgraph instead (the plan cache's
+    # ``opt`` stage builds it once per (spec, optimizer) fingerprint).
+    # Plain frozen data, so it sweeps as an axis like any other field.
+    optimizer: Optional[OptimizerSpec] = None
     # Recommended executors (all of runner.EXECUTORS still accept the spec;
     # this guides smoke sweeps, e.g. netsim is impractical at N=1000).
     executors: Tuple[str, ...] = ("plan", "engine", "netsim")
@@ -256,6 +263,10 @@ class ScenarioSpec:
                 f"{sorted(NETWORK_PRESETS)}")
         if isinstance(self.underlay, NetworkSpec):
             self.underlay.validate()
+        if isinstance(self.optimizer, dict):
+            self.optimizer = OptimizerSpec.from_dict(self.optimizer)
+        if self.optimizer is not None:
+            self.optimizer.validate()
         n = self.n
         for ev in self.churn:
             if ev.action not in CHURN_ACTIONS:
@@ -287,7 +298,7 @@ class ScenarioSpec:
             underlay = self.underlay.to_dict()
         else:
             underlay = dataclasses.asdict(self.underlay)
-        return {
+        d = {
             "name": self.name,
             "overlay": overlay,
             "underlay": underlay,
@@ -310,6 +321,78 @@ class ScenarioSpec:
             "coloring_algorithm": self.coloring_algorithm,
             "description": self.description,
         }
+        # emitted only when set: legacy results stay byte-identical
+        if self.optimizer is not None:
+            d["optimizer"] = self.optimizer.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ScenarioSpec":
+        """Reload a :meth:`to_dict` payload (e.g. the ``spec`` block of a
+        serialized :class:`ScenarioResult`) into an equivalent spec.
+
+        JSON has no tuples, so list-typed fields are coerced back; an
+        explicit cost-matrix overlay reloads to the *identical* matrix —
+        the optimizer-overlay round-trip contract
+        (``tests/test_opt.py::test_cost_matrix_round_trip``).
+        """
+        ov = d["overlay"]
+        if isinstance(ov, dict) and ov.get("type") == "TopologySpec":
+            kw = {k: v for k, v in ov.items()
+                  if k in TopologySpec.__dataclass_fields__}
+            for key in ("intra_cost_ms", "inter_cost_ms"):
+                if isinstance(kw.get(key), list):
+                    kw[key] = tuple(kw[key])
+            overlay: Any = TopologySpec(**kw)
+        elif isinstance(ov, dict):
+            overlay = np.asarray(ov["adj"], dtype=np.float64)
+        else:
+            overlay = np.asarray(ov, dtype=np.float64)
+        und = d.get("underlay")
+        underlay: Any
+        if und is None or isinstance(und, str):
+            underlay = und
+        elif und.get("type") == "NetworkSpec":
+            kw = {k: v for k, v in und.items()
+                  if k in NetworkSpec.__dataclass_fields__}
+            if kw.get("router_edges") is not None:
+                kw["router_edges"] = tuple(
+                    tuple(e) for e in kw["router_edges"])
+            if kw.get("access_range") is not None:
+                kw["access_range"] = tuple(kw["access_range"])
+            if kw.get("node_ids") is not None:
+                kw["node_ids"] = tuple(kw["node_ids"])
+            underlay = NetworkSpec(**kw)
+        else:
+            kw = {k: v for k, v in und.items()
+                  if k in TestbedSpec.__dataclass_fields__}
+            if kw.get("node_ids") is not None:
+                kw["node_ids"] = tuple(kw["node_ids"])
+            underlay = TestbedSpec(**kw)
+        opt = d.get("optimizer")
+        return cls(
+            name=d.get("name", "custom"),
+            overlay=overlay,
+            protocol=d.get("protocol", "dissemination"),
+            n_segments=d.get("n_segments", 4),
+            payload=d.get("payload", 21.2),
+            codec=d.get("codec", "fp32"),
+            rounds=d.get("rounds", 1),
+            churn=tuple(ChurnEvent(**ev) for ev in d.get("churn", ())),
+            underlay=underlay,
+            drop_rate=d.get("drop_rate", 0.0),
+            drop_seed=d.get("drop_seed", 0),
+            max_staleness=d.get("max_staleness", 0),
+            record_events=d.get("record_events", False),
+            compute_time_s=d.get("compute_time_s", 0.0),
+            compute_jitter_s=d.get("compute_jitter_s", 0.0),
+            jitter_seed=d.get("jitter_seed", 0),
+            require=tuple(d.get("require", ())),
+            mst_algorithm=d.get("mst_algorithm", "prim"),
+            coloring_algorithm=d.get("coloring_algorithm", "bfs"),
+            optimizer=OptimizerSpec.from_dict(opt) if opt else None,
+            description=d.get("description", ""),
+        ).validate()
 
 
 @dataclass

@@ -1,0 +1,303 @@
+"""The adaptive overlay optimizer (repro.opt) and its stack wiring.
+
+Seeded, deterministic coverage of DESIGN.md §16: the objective protocol
+prices exactly what the executors run, the edit search is reproducible
+(same spec → same overlay fingerprint), the analytic-guided overlay beats
+the paper's MST on the heterogeneous presets *and the fluid simulator
+agrees*, the plan cache's ``opt`` stage memoizes one search per
+fingerprint, optimizer-produced cost-matrix overlays round-trip through
+result JSON bit-identically, and the optimizer's spans/counters export to
+a schema-valid Perfetto trace.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.graph import TopologySpec, make_topology
+from repro.core.network import as_compiled_network, get_preset
+from repro.core.replan import SparsePlanner, plan_equal
+from repro.obs import Recorder, chrome_trace, validate_trace
+from repro.opt import (
+    OBJECTIVES,
+    EvalContext,
+    OptimizerSpec,
+    SearchState,
+    context_for_scenario,
+    make_objective,
+    membership_descent,
+    optimize_overlay,
+    reoptimize,
+)
+from repro.opt.search import _as_candidate
+from repro.scenario import ScenarioSpec, run_scenario, run_sweep, scenarios
+from repro.scenario.cache import PlanCache, overlay_fingerprint
+
+N = 12
+UNIVERSE = TopologySpec(kind="erdos_renyi", n=N, seed=3, p=0.55,
+                        n_subnets=4)
+ANNEAL = OptimizerSpec(objective="round_time", strategy="anneal", steps=400,
+                       init_temp=30.0, cooling=0.985, seed=0)
+
+
+def _ctx(preset: str) -> EvalContext:
+    net = as_compiled_network(get_preset(preset, N), n=N)
+    return EvalContext(network=net, payload_mb=21.2, protocol="mosgu",
+                       n_segments=4, coloring_algorithm="bfs")
+
+
+@pytest.fixture(scope="module")
+def universe():
+    return make_topology(UNIVERSE)
+
+
+@pytest.fixture(scope="module")
+def wan_results(universe):
+    """One annealed optimization per heterogeneous preset, shared by the
+    ratio / determinism / netsim assertions (the expensive fixture)."""
+    return {p: optimize_overlay(universe, _ctx(p), ANNEAL)
+            for p in ("wan", "edge")}
+
+
+class TestObjectives:
+    def test_all_objectives_finite(self, universe):
+        from repro.core.sparse import CSRGraph
+
+        ctx = _ctx("wan")
+        state = SearchState(CSRGraph.from_dense(universe))
+        cand = _as_candidate(state)
+        for name in OBJECTIVES:
+            score = make_objective(name)(cand, ctx)
+            assert np.isfinite(score) and score > 0, name
+
+    def test_unknown_objective_raises(self):
+        with pytest.raises(ValueError, match="unknown objective"):
+            make_objective("nope")
+
+    def test_round_time_matches_profile(self, universe):
+        """The round_time objective is the oracle's closed form — the same
+        number the plan executor's timing stage would report."""
+        ctx = _ctx("wan")
+        from repro.core.sparse import CSRGraph
+
+        state = SearchState(CSRGraph.from_dense(universe))
+        cand = _as_candidate(state)
+        profile, wire_mb = ctx.profile_for(cand)
+        expected = profile.estimate(wire_mb).total_time_s
+        assert make_objective("round_time")(cand, ctx) == expected
+
+    def test_context_for_scenario_masks_members(self):
+        spec = ScenarioSpec(overlay=UNIVERSE, protocol="mosgu",
+                            payload="b0", underlay="wan").validate()
+        full = context_for_scenario(spec)
+        masked = context_for_scenario(spec, members=list(range(N - 2)))
+        assert full.network.n == N
+        assert masked.network.n == N - 2
+        assert full.payload_mb == pytest.approx(21.2)
+
+
+class TestOptimizerSpec:
+    def test_round_trip(self):
+        assert OptimizerSpec.from_dict(ANNEAL.to_dict()) == ANNEAL
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown objective"):
+            OptimizerSpec(objective="nope").validate()
+        with pytest.raises(ValueError, match="unknown strategy"):
+            OptimizerSpec(strategy="nope").validate()
+        with pytest.raises(ValueError, match="cooling"):
+            OptimizerSpec(cooling=0.0).validate()
+        with pytest.raises(ValueError, match="steps"):
+            OptimizerSpec(steps=0).validate()
+
+
+class TestSearch:
+    def test_seeded_deterministic(self, universe, wan_results):
+        again = optimize_overlay(universe, _ctx("wan"), ANNEAL)
+        assert again.fingerprint() == wan_results["wan"].fingerprint()
+        assert again.best_score == wan_results["wan"].best_score
+
+    def test_beats_mst_on_heterogeneous_presets(self, wan_results):
+        """The acceptance floor: ≥1.15× lower estimated round time than the
+        ms-cost MST on both the wan and edge presets."""
+        for preset, res in wan_results.items():
+            assert res.improvement >= 1.15, (preset, res.improvement)
+
+    def test_result_plan_matches_scratch(self, wan_results):
+        for res in wan_results.values():
+            st = res.state
+            scratch = SparsePlanner(st.working_csr(),
+                                    seed=ANNEAL.seed).plan(list(st.members))
+            assert plan_equal(res.plan, scratch)
+
+    def test_strategies_run(self, universe):
+        ctx = _ctx("wan")
+        for strategy, kw in (("hillclimb", {}),
+                             ("multistart", {"restarts": 2}),
+                             ("anneal", {"init_temp": 20.0})):
+            spec = OptimizerSpec(strategy=strategy, steps=30, seed=1, **kw)
+            res = optimize_overlay(universe, ctx, spec)
+            assert res.best_score <= res.base_score
+            assert res.accepted + res.rejected > 0
+
+    def test_degree_cap_held(self, universe):
+        spec = OptimizerSpec(strategy="anneal", steps=150, init_temp=30.0,
+                             max_degree=4, seed=0)
+        res = optimize_overlay(universe, _ctx("wan"), spec)
+        start = SearchState(res.state.universe).degree
+        assert (res.state.degree <= np.maximum(start, 4)).all()
+
+    def test_reoptimize_warm_start(self, universe, wan_results):
+        res = wan_results["wan"]
+        members = [m for m in range(N) if m != 5]
+        net = as_compiled_network(
+            get_preset("wan", N).masked(members), n=len(members))
+        ctx = EvalContext(network=net, payload_mb=21.2, protocol="mosgu")
+        # re-run the base optimization so the churn repair consumes a fresh
+        # state (wan_results is shared by other tests)
+        fresh = optimize_overlay(universe, _ctx("wan"), ANNEAL)
+        out = reoptimize(fresh, ctx, members)
+        assert list(out.state.members) == members
+        assert out.best_score <= out.base_score
+        scratch = SparsePlanner(out.state.working_csr(),
+                                seed=ANNEAL.seed).plan(members)
+        assert plan_equal(out.plan, scratch)
+
+
+class TestScenarioWiring:
+    def test_netsim_confirms_the_win(self):
+        """The oracle's claimed win must survive the fluid simulator on
+        both presets (the oracle-vs-simulator validation contract)."""
+        base = ScenarioSpec(name="mst", overlay=UNIVERSE, protocol="mosgu",
+                            payload="b0", rounds=1)
+        for preset in ("wan", "edge"):
+            mst = base.replace(underlay=preset)
+            opt = mst.replace(optimizer=ANNEAL)
+            t_mst = run_scenario(mst, executor="netsim").total_time_s
+            t_opt = run_scenario(opt, executor="netsim").total_time_s
+            assert t_opt < t_mst, (preset, t_opt, t_mst)
+
+    def test_cache_opt_stage(self):
+        spec = ScenarioSpec(overlay=UNIVERSE, protocol="mosgu",
+                            payload="b0", underlay="wan",
+                            optimizer=OptimizerSpec(steps=40)).validate()
+        cache = PlanCache()
+        g1 = cache.overlay(spec)
+        assert cache.counters["opt_misses"] == 1
+        g2 = cache.overlay(spec)
+        assert cache.counters["opt_hits"] == 1
+        assert g1 is g2
+        # the optimized overlay differs from the declared universe
+        assert not np.array_equal(g1.adj, make_topology(UNIVERSE).adj)
+
+    def test_fingerprint_isolates_optimizer(self):
+        plain = ScenarioSpec(overlay=UNIVERSE, underlay="wan",
+                             protocol="mosgu", payload="b0").validate()
+        tuned = plain.replace(optimizer=OptimizerSpec(steps=40))
+        other = plain.replace(optimizer=OptimizerSpec(steps=80))
+        fps = {overlay_fingerprint(s) for s in (plain, tuned, other)}
+        assert len(fps) == 3
+
+    def test_spec_dict_omits_unset_optimizer(self):
+        d = ScenarioSpec(overlay=UNIVERSE).validate().to_dict()
+        assert "optimizer" not in d
+        d2 = ScenarioSpec(overlay=UNIVERSE,
+                          optimizer=OptimizerSpec()).validate().to_dict()
+        assert d2["optimizer"]["strategy"] == "hillclimb"
+
+    def test_optimizer_as_sweep_axis(self):
+        from repro.scenario.sweep import SweepSpec
+
+        sweep = SweepSpec(
+            name="opt_axis",
+            base=ScenarioSpec(overlay=UNIVERSE, protocol="mosgu",
+                              payload="b0", underlay="wan"),
+            grid={"optimizer": (None, OptimizerSpec(steps=30))})
+        cells = sweep.cells()
+        assert len(cells) == 2
+        assert cells[0].spec.optimizer is None
+        assert cells[1].spec.optimizer == OptimizerSpec(steps=30)
+        result = run_sweep(sweep, executor="plan")
+        assert len(result) == 2
+        # exactly one cell triggered the opt stage, and its serialized spec
+        # carries the optimizer declaration
+        assert result.cache_stats["opt_misses"] == 1
+        assert "optimizer" not in result[0].result.spec
+        assert result[1].result.spec["optimizer"]["steps"] == 30
+
+    def test_registry_sweep_registered(self):
+        sweep = scenarios.get_sweep("optimized_vs_mst")
+        cells = sweep.cells()
+        assert len(cells) == 4
+        presets = {c.spec.underlay for c in cells}
+        assert presets == {"wan", "edge"}
+        assert sum(c.spec.optimizer is not None for c in cells) == 2
+
+    def test_cost_matrix_round_trip(self):
+        """An optimizer-produced overlay serialized through ScenarioResult
+        JSON reloads to a bit-identical plan (the fingerprint pin)."""
+        g = make_topology(UNIVERSE)
+        res = optimize_overlay(g, _ctx("wan"),
+                               OptimizerSpec(strategy="anneal", steps=150,
+                                             init_temp=30.0, seed=0))
+        spec = ScenarioSpec(name="rt", overlay=res.state.working_matrix(),
+                            protocol="mosgu", payload="b0",
+                            underlay="wan").validate()
+        r1 = run_scenario(spec, executor="plan")
+        reloaded = ScenarioSpec.from_dict(
+            json.loads(r1.to_json())["spec"])
+        # bit-identical overlay => identical cache fingerprint and plan
+        assert np.array_equal(np.asarray(reloaded.overlay),
+                              np.asarray(spec.overlay))
+        assert overlay_fingerprint(reloaded) == overlay_fingerprint(spec)
+        from repro.core.sparse import CSRGraph
+
+        s1 = SearchState(CSRGraph.from_dense(spec.overlay_graph()))
+        s2 = SearchState(CSRGraph.from_dense(reloaded.overlay_graph()))
+        assert s1.fingerprint() == s2.fingerprint()
+        assert plan_equal(s1.plan(), s2.plan())
+        r2 = run_scenario(reloaded, executor="plan")
+        d1, d2 = r1.to_dict(), r2.to_dict()
+        d1["scenario"] = d2["scenario"] = ""
+        d1["spec"]["name"] = d2["spec"]["name"] = ""
+        assert d1 == d2
+
+
+class TestMembershipDescent:
+    def test_matches_promoted_contract(self):
+        g = make_topology(TopologySpec(kind="knn", n=200, seed=0, k=8,
+                                       n_subnets=2))
+        out = membership_descent(g, rounds=2, pool=6, timed_refs=2, seed=0)
+        assert set(out) == {"n", "rounds", "candidates_scored",
+                            "full_rebuild_refs", "per_edit_replan_ms",
+                            "per_edit_full_ms", "per_edit_speedup", "trail"}
+        assert out["n"] == 200
+        assert out["rounds"] == len(out["trail"]) <= 2
+        assert out["candidates_scored"] > 0
+
+    def test_deterministic(self):
+        g = make_topology(TopologySpec(kind="knn", n=150, seed=1, k=6,
+                                       n_subnets=2))
+        a = membership_descent(g, rounds=2, pool=5, seed=3)
+        b = membership_descent(g, rounds=2, pool=5, seed=3)
+        assert a["trail"] == b["trail"]
+
+
+class TestObservability:
+    def test_trace_covers_opt_track(self, universe):
+        rec = Recorder()
+        with obs.recording(rec):
+            optimize_overlay(universe, _ctx("wan"),
+                             OptimizerSpec(steps=25, seed=0))
+        trace = chrome_trace(rec)
+        validate_trace(trace)
+        procs = {e["args"]["name"] for e in trace["traceEvents"]
+                 if e.get("name") == "process_name"}
+        assert "opt" in procs
+        spans = {e["name"] for e in trace["traceEvents"]
+                 if e.get("ph") == "X"}
+        assert "opt/step" in spans
+        assert rec.counters["opt.accepted"] + rec.counters["opt.rejected"] \
+            == 25
+        assert sum(1 for s in rec.samples if s[0] == "opt.objective") == 25

@@ -1,0 +1,123 @@
+"""Hypothesis property sweeps for the overlay optimizer (optional dev extra).
+
+Randomized counterparts of the seeded checks in ``test_opt.py``:
+
+  * every edit sequence the move proposer can produce keeps the member
+    subgraph connected (the maintained tree always spans the members),
+  * degree caps are never exceeded by an accepted edit (a node over the
+    cap at the start can only come down),
+  * ``plan_equal`` holds between the incrementally-maintained search
+    state and a from-scratch :class:`SparsePlanner` rebuild of the final
+    working overlay — the exactness contract behind never rebuilding
+    inside the search loop,
+  * the same holds across a churn ``set_members`` warm start.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional dev extra")
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.graph import Graph, TopologySpec, make_topology
+from repro.core.replan import SparsePlanner, plan_equal
+from repro.core.sparse import CSRGraph, union_edges
+from repro.opt import SearchState
+from repro.opt.search import _propose
+
+
+@st.composite
+def universes(draw):
+    kind = draw(st.sampled_from(["erdos_renyi", "watts_strogatz", "knn"]))
+    n = draw(st.integers(8, 24))
+    seed = draw(st.integers(0, 2**10))
+    g = make_topology(TopologySpec(kind=kind, n=n, seed=seed, n_subnets=3))
+    if isinstance(g, Graph):
+        g = CSRGraph.from_dense(g)
+    return g
+
+
+def _make_state(universe, seed, max_degree=0):
+    try:
+        return SearchState(universe, seed=seed, max_degree=max_degree)
+    except ValueError:
+        assume(False)  # the generated universe happened to be disconnected
+
+
+def random_walk(state, rng, steps):
+    """Drive a random sequence of accepted edits through the state — every
+    proposal the move engine can emit, committed unconditionally (the
+    superset of what any accept rule would commit)."""
+    edits = 0
+    for _ in range(steps):
+        move = _propose(state, rng, None)
+        if move is None:
+            continue
+        _, rem, add = move
+        cand = state.try_edit(rem, add)
+        if cand is not None:
+            state.commit(cand)
+            edits += 1
+    return edits
+
+
+class TestOptProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(g=universes(), seed=st.integers(0, 2**16))
+    def test_edits_preserve_connectivity(self, g, seed):
+        state = _make_state(g, seed)
+        random_walk(state, np.random.default_rng(seed), 30)
+        assert len(state.tree_idx) == len(state.members) - 1
+        live = state.live_member_edges()
+        parent = union_edges(state.n, state.eu[live], state.ev[live])
+        assert len({int(parent[m]) for m in state.members}) == 1
+
+    @settings(max_examples=30, deadline=None)
+    @given(g=universes(), seed=st.integers(0, 2**16),
+           cap=st.integers(2, 6))
+    def test_degree_caps_respected(self, g, seed, cap):
+        state = _make_state(g, seed, max_degree=cap)
+        start = state.degree.copy()
+        random_walk(state, np.random.default_rng(seed), 30)
+        # adds never push a node past the cap; a node already above it
+        # (in the declared universe) can only come down
+        assert (state.degree <= np.maximum(start, cap)).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(g=universes(), seed=st.integers(0, 2**16))
+    def test_incremental_matches_scratch(self, g, seed):
+        state = _make_state(g, seed)
+        random_walk(state, np.random.default_rng(seed), 25)
+        scratch = SparsePlanner(state.working_csr(), seed=seed).plan(
+            list(state.members))
+        assert plan_equal(state.plan(), scratch)
+
+    @settings(max_examples=30, deadline=None)
+    @given(g=universes(), seed=st.integers(0, 2**16),
+           drops=st.integers(1, 3))
+    def test_churn_warm_start_matches_scratch(self, g, seed, drops):
+        state = _make_state(g, seed)
+        rng = np.random.default_rng(seed)
+        random_walk(state, rng, 15)
+        survivors = sorted(
+            int(m) for m in rng.choice(
+                state.members, size=len(state.members) - drops,
+                replace=False))
+        assume(len(survivors) >= 3)
+        try:
+            state.set_members(survivors)
+        except ValueError:
+            # the drop disconnected the working member subgraph: the
+            # scratch build must agree that no plan exists
+            with pytest.raises(ValueError):
+                SparsePlanner(state.working_csr(),
+                              seed=seed).plan(survivors)
+            return
+        scratch = SparsePlanner(state.working_csr(), seed=seed).plan(
+            survivors)
+        assert plan_equal(state.plan(), scratch)
+        # and the state keeps supporting edits after the warm start
+        random_walk(state, rng, 10)
+        scratch = SparsePlanner(state.working_csr(), seed=seed).plan(
+            list(state.members))
+        assert plan_equal(state.plan(), scratch)
