@@ -36,6 +36,7 @@ IGNORE_KEYS = frozenset({
     "dense_s", "csr_s", "full_s", "replan_s", "time_s",
     "speedup", "speedup_x", "speedup_vs_fp32",
     "evals_per_s", "per_eval_ms",
+    "plans_per_s", "verify_s",
 })
 
 #: (key, relative tolerance) — metrics allowed a band wider than exact.

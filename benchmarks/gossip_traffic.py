@@ -323,9 +323,33 @@ def underlay_bench(speedup_floor: float = 5.0) -> dict:
     }
 
 
+#: --list skips in-process verification above this overlay size and defers
+#: to `python -m repro.verify --scenario <name>` (scale_1m takes seconds)
+LIST_VERIFY_MAX_N = 200_000
+
+
+def _verification_status(spec, cache) -> str:
+    """One scenario's conformance-table entry: ``verified ✓ (k invariants)``
+    or ``skipped (<reason>)`` — the registry doubles as a conformance
+    table (DESIGN.md §17)."""
+    from repro.verify import VerificationError, verify_scenario_plans
+
+    if spec.n > LIST_VERIFY_MAX_N:
+        return (f"skipped (n={spec.n}: run `python -m repro.verify "
+                f"--scenario {spec.name}`)")
+    try:
+        out = verify_scenario_plans(spec, plan_cache=cache, mode="strict")
+    except VerificationError as exc:
+        return f"FAILED {exc}"
+    n_inv = max((len(c.invariants) for c in out["certificates"]), default=0)
+    return f"verified ✓ ({n_inv} invariants)"
+
+
 def list_scenarios() -> None:
     from repro.scenario import executors as _executors
+    from repro.scenario.cache import PlanCache
 
+    cache = PlanCache()
     width = max(len(n) for n in scenarios.names())
     print("registered executors:")
     for name, caps in _executors.capability_table().items():
@@ -338,6 +362,7 @@ def list_scenarios() -> None:
               f"codec={spec.codec:5s} rounds={spec.rounds:2d} "
               f"executors={','.join(spec.executors)}")
         print(f"{'':{width}s}  {spec.description}")
+        print(f"{'':{width}s}  {_verification_status(spec, cache)}")
     print("\nnamed sweeps:")
     for name in scenarios.sweep_names():
         sweep = scenarios.get_sweep(name)

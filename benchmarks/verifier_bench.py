@@ -1,0 +1,105 @@
+"""Static-verifier acceptance bench: verification must run at counting
+speed, or nobody will leave it on.
+
+Standalone usage (CI perf trajectory):
+
+  PYTHONPATH=src python benchmarks/verifier_bench.py [--smoke]
+
+writes ``BENCH_verify.json`` with three sections:
+
+* ``throughput`` — repeated full verification (all 12 invariant classes,
+  fresh :class:`~repro.scenario.cache.PlanCache` each iteration so nothing
+  memoizes) of the ``paper_table3`` epoch plan. Floor: >= 50 plans/s —
+  a table-3-sized plan must verify in well under the time any executor
+  takes to run it.
+* ``scale_1000`` — one cold full verification of the registry's N=1000
+  dissemination plan (the dense possession lattice at its largest
+  registry instance). Floor: < 2 s.
+* ``certificates`` — the deterministic shape of both certificates
+  (invariants proven, slots, transmissions, completion slot, wire MB) —
+  gated exactly by ``bench_diff`` like every other plan contract.
+
+Both floors fail the bench with a non-zero exit (the ``planner_bench``
+precedent); wall-clock fields (``plans_per_s``, ``verify_s``) are in
+``bench_diff.IGNORE_KEYS`` and never gated.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.scenario import scenarios
+from repro.scenario.cache import PlanCache
+from repro.verify import verify_scenario_plans
+
+THROUGHPUT_FLOOR = 50.0  # plans/s on the paper_table3 cell
+SCALE_1000_FLOOR_S = 2.0
+
+
+def _cert_summary(cert) -> dict:
+    d = {"kind": cert.kind, "n": cert.n, "n_slots": cert.n_slots,
+         "transmissions": cert.transmissions,
+         "n_invariants": len(cert.invariants),
+         "skipped": sorted(cert.skipped)}
+    if cert.completion_slot is not None:
+        d["completion_slot"] = cert.completion_slot
+    if cert.wire_mb is not None:
+        d["wire_mb"] = round(cert.wire_mb, 6)
+    return d
+
+
+def throughput_bench(reps: int) -> dict:
+    spec = scenarios.get("paper_table3")
+    # warm once so topology/payload resolution is out of the timed loop
+    verify_scenario_plans(spec, plan_cache=PlanCache())
+    t0 = time.time()
+    for _ in range(reps):
+        # a fresh cache per iteration: every plan is rebuilt AND re-verified
+        # cold — the floor prices the verifier, not the memoization
+        out = verify_scenario_plans(spec, plan_cache=PlanCache())
+    dt = time.time() - t0
+    plans_per_s = reps / dt
+    cert = out["certificates"][0]
+    print(f"[throughput] {reps} cold verifications in {dt:.2f}s: "
+          f"{plans_per_s:.0f} plans/s (floor {THROUGHPUT_FLOOR:.0f})")
+    return {"reps": reps, "plans_per_s": round(plans_per_s, 1),
+            "floor_plans_per_s": THROUGHPUT_FLOOR,
+            "certificate": _cert_summary(cert)}
+
+
+def scale_1000_bench() -> dict:
+    spec = scenarios.get("scale_1000")
+    t0 = time.time()
+    out = verify_scenario_plans(spec, plan_cache=PlanCache())
+    dt = time.time() - t0
+    cert = out["certificates"][0]
+    print(f"[scale_1000] full verification (dense {cert.n}x{cert.n} "
+          f"possession lattice, {cert.transmissions} sends) in {dt:.2f}s "
+          f"(floor {SCALE_1000_FLOOR_S}s)")
+    return {"verify_s": round(dt, 3), "floor_s": SCALE_1000_FLOOR_S,
+            "certificate": _cert_summary(cert)}
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    out = {
+        "throughput": throughput_bench(reps=30 if smoke else 150),
+        "scale_1000": scale_1000_bench(),
+    }
+    with open("BENCH_verify.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("wrote BENCH_verify.json")
+
+    if out["throughput"]["plans_per_s"] < THROUGHPUT_FLOOR:
+        raise SystemExit(
+            f"verification throughput {out['throughput']['plans_per_s']} "
+            f"plans/s below the {THROUGHPUT_FLOOR} plans/s acceptance floor")
+    if out["scale_1000"]["verify_s"] > SCALE_1000_FLOOR_S:
+        raise SystemExit(
+            f"scale_1000 verification took {out['scale_1000']['verify_s']}s, "
+            f"above the {SCALE_1000_FLOOR_S}s acceptance ceiling")
+
+
+if __name__ == "__main__":
+    main()

@@ -121,6 +121,7 @@ class PlanCache:
         self._member_plans: Dict[Tuple[Any, ...], MemberPlan] = {}
         self._planners: Dict[Tuple[Any, ...], SparsePlanner] = {}
         self._latest_plan: Dict[Tuple[Any, ...], MemberPlan] = {}
+        self._verifieds: Dict[Tuple[Any, ...], Any] = {}
         self.counters: Dict[str, int] = {
             "overlay_hits": 0, "overlay_misses": 0,
             "opt_hits": 0, "opt_misses": 0,
@@ -132,6 +133,7 @@ class PlanCache:
             "timing_hits": 0, "timing_misses": 0,
             "replan_hits": 0, "replan_misses": 0,
             "replan_incremental": 0, "replan_full": 0,
+            "verified_hits": 0, "verified_misses": 0,
         }
 
     # -- accounting helpers --------------------------------------------------
@@ -312,6 +314,16 @@ class PlanCache:
 
         return self._memo("policy", self._policies,
                           policy_key(spec, members), build)
+
+    def verified(self, key: Tuple[Any, ...], build: Callable[[], Any]):
+        """Cached static-verification certificate for one epoch's plan
+        (:mod:`repro.verify`). The key folds everything the verifier's
+        verdict depends on — plan identity, payload, codec, underlay
+        fingerprint, rounds, staleness window — so a plan verified once is
+        never re-verified, across scenarios, sweeps and repeated runs
+        sharing this cache. A failed verification raises out of ``build``
+        and caches nothing (re-running re-checks)."""
+        return self._memo("verified", self._verifieds, key, build)
 
     def trajectory(self, spec: "ScenarioSpec", build) -> list:
         """Cached membership trajectory: ``(round, moderator, members,

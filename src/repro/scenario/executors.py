@@ -71,6 +71,7 @@ from ..core.plan import CommPolicy
 from ..core.sparse import CSRGraph
 from .cache import PlanCache
 from .spec import (
+    CAPABILITY_FLAGS,
     ChurnEvent,
     RoundReport,
     ScenarioResult,
@@ -345,9 +346,9 @@ class Executor:
     counting_only: bool = False  # pure accounting; safe at N=1000 sweep scale
     supports_staleness: bool = False  # honours max_staleness / compute jitter
 
-    CAPABILITY_FLAGS = ("supports_drops", "provides_timing",
-                        "provides_numerics", "moves_payloads",
-                        "counting_only", "supports_staleness")
+    # the canonical tuple lives in spec.py so ScenarioSpec.validate() can
+    # reject a typo'd require flag at declaration time
+    CAPABILITY_FLAGS = CAPABILITY_FLAGS
 
     # state set by execute() before any hook runs
     spec: ScenarioSpec

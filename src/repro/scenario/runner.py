@@ -69,13 +69,34 @@ _membership_rounds = membership_rounds
 def run_scenario(spec: ScenarioSpec,
                  executor: Union[str, Executor] = "engine",
                  record_trace: bool = False,
-                 plan_cache: Optional[PlanCache] = None) -> ScenarioResult:
+                 plan_cache: Optional[PlanCache] = None,
+                 verify: str = "off") -> ScenarioResult:
     """Execute a declared scenario end-to-end on one executor.
 
     ``executor`` is a registry name (``executors.names()``) or an
     :class:`Executor` instance; ``plan_cache`` shares MST/coloring/policy
     work across calls (a fresh cache per call when omitted).
+
+    ``verify`` statically proves every epoch's plan before anything runs
+    (:mod:`repro.verify`): ``"strict"`` raises
+    :class:`~repro.verify.VerificationError` on the first violated
+    invariant, ``"warn"`` downgrades to a warning and runs anyway, and the
+    default ``"off"`` does not even import the verifier — the executor
+    path is byte-identical to a call without the argument. Verification
+    shares the run's plan cache, so the executor reuses (never rebuilds)
+    the policies the verifier walked, and a plan verified once is never
+    re-verified across calls sharing a cache.
     """
+    if verify not in ("off", "warn", "strict"):
+        raise ValueError(
+            f"verify must be one of ('off', 'warn', 'strict'), got {verify!r}")
+    if verify != "off":
+        from .. import verify as _verify  # lazy: zero cost when off
+
+        if plan_cache is None:
+            plan_cache = PlanCache()
+        _verify.verify_scenario_plans(spec, plan_cache=plan_cache,
+                                      mode=verify)
     return executors.get(executor).execute(spec, record_trace=record_trace,
                                            plan_cache=plan_cache)
 

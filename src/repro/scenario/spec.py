@@ -54,6 +54,13 @@ SCENARIO_PROTOCOLS = (
 
 CHURN_ACTIONS = ("leave", "rejoin")
 
+# Executor capability flags a spec may require (the single source of truth;
+# ``executors.Executor.CAPABILITY_FLAGS`` aliases this tuple). Validated at
+# spec construction so a typo'd flag fails when the spec is declared, not
+# rounds later inside an executor with a "missing from all executors" error.
+CAPABILITY_FLAGS = ("supports_drops", "provides_timing", "provides_numerics",
+                    "moves_payloads", "counting_only", "supports_staleness")
+
 
 def resolve_payload_mb(payload: Union[float, int, str]) -> float:
     """Resolve a scenario payload declaration to on-wire megabytes.
@@ -252,6 +259,11 @@ class ScenarioSpec:
             raise ValueError("compute_time_s must be >= 0")
         if self.compute_jitter_s < 0:
             raise ValueError("compute_jitter_s must be >= 0")
+        for flag in self.require:
+            if flag not in CAPABILITY_FLAGS:
+                raise ValueError(
+                    f"spec.require names unknown capability {flag!r}; "
+                    f"known: {CAPABILITY_FLAGS}")
         try:
             make_codec(self.codec)
         except ValueError:

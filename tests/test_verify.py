@@ -1,0 +1,567 @@
+"""Static plan verifier + determinism lint (repro.verify).
+
+Four contract families:
+
+* **acceptance** — every (fast) registry scenario and representative sweep
+  cells verify under ``strict``; certificates name exactly the invariants
+  proven, per-segment completion is certified for segmented gossip, and
+  the verified stage memoizes per unique plan.
+* **rejection** — each invariant class has a mutation test asserting the
+  *precise* invariant name the verifier raises (the satellite-3 contract:
+  an edge added to a used slot, a swapped color, a dropped send, etc. are
+  each rejected with the right label).
+* **wiring** — ``run_scenario(verify=...)`` modes, byte-identical results
+  with verify off vs strict, the spec-level and executor-level unknown
+  ``require`` flag errors, the CLI.
+* **lint** — the determinism lint is clean over ``src/repro`` (with the
+  reviewed allowlist) and each rule fires on a minimal fixture.
+"""
+import dataclasses
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, TopologySpec, make_topology
+from repro.core.network import as_compiled_network
+from repro.core.plan import make_policy
+from repro.core.replan import SparsePlanner
+from repro.core.sparse import CSRGraph
+from repro.scenario import run_scenario, scenarios
+from repro.scenario.cache import PlanCache
+from repro.scenario.executors import _member_testbed, get as get_executor
+from repro.scenario.spec import CAPABILITY_FLAGS, ScenarioSpec
+from repro.verify import (
+    INVARIANT_CLASSES,
+    PlanFacts,
+    VerificationError,
+    VerificationWarning,
+    check_admission_acyclic,
+    check_admission_schedule,
+    verify_facts,
+    verify_policy,
+    verify_result,
+    verify_scenario_plans,
+)
+from repro.verify.invariants import SlotRecord
+
+SRC_ROOT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src", "repro")
+
+
+def _facts_for(name: str, cache=None):
+    """PlanFacts + (spec, members, cache) for one registry scenario's sole
+    epoch, built through the same cache stages the verifier uses."""
+    spec = scenarios.get(name)
+    cache = cache or PlanCache()
+    overlay = cache.overlay(spec)
+    from repro.scenario.executors import membership_rounds
+
+    r, mod, members, _ = next(iter(membership_rounds(spec, overlay)))
+    mt = tuple(members)
+    policy = cache.policy(spec, mt, lambda: mod.build_graph()[0])
+    return PlanFacts.from_policy(policy), spec, mt, cache
+
+
+def _path_graph():
+    """0 - 1 - 2 chain."""
+    adj = np.array([[0.0, 1.0, 0.0], [1.0, 0.0, 1.0], [0.0, 1.0, 0.0]])
+    return Graph(adj)
+
+
+def _hand_facts(slots, colors, n=3, n_payloads=3, kind="dissemination"):
+    return PlanFacts(n=n, kind=kind, slots=slots,
+                     colors=None if colors is None else np.asarray(colors),
+                     payload_fraction=1.0, n_payloads=n_payloads,
+                     graph=_path_graph())
+
+
+def _slot(color, sends):
+    arr = np.asarray(sends, dtype=np.int64).reshape(-1, 3)
+    return SlotRecord(color, arr[:, 0].copy(), arr[:, 1].copy(),
+                      arr[:, 2].copy())
+
+
+# ---------------------------------------------------------------------------
+# acceptance
+# ---------------------------------------------------------------------------
+
+
+class TestAcceptance:
+    FAST_SCENARIOS = (
+        "paper_table3", "paper_flooding_baseline", "quantized_table3",
+        "topk_sweep", "churn_storm", "lossy_links", "hetero_edge",
+        "campus_wan", "segmented_sweep", "async_stragglers", "mesh_smoke",
+    )
+
+    def test_registry_scenarios_verify_strict(self):
+        cache = PlanCache()
+        for name in self.FAST_SCENARIOS:
+            out = verify_scenario_plans(scenarios.get(name),
+                                        plan_cache=cache, mode="strict")
+            assert out["ok"], (name, out["error"])
+            assert out["epochs"] >= 1
+            for cert in out["certificates"]:
+                assert cert.invariants, name
+                for inv in cert.invariants:
+                    assert inv in INVARIANT_CLASSES
+                # nothing is silently unchecked: every invariant class is
+                # either proven or skipped with a recorded reason
+                assert (set(cert.invariants) | set(cert.skipped)
+                        == set(INVARIANT_CLASSES)), name
+
+    def test_paper_table3_proves_all_invariants(self):
+        out = verify_scenario_plans(scenarios.get("paper_table3"),
+                                    mode="strict")
+        cert = out["certificates"][0]
+        assert set(cert.invariants) == set(INVARIANT_CLASSES)
+        assert cert.skipped == {}
+        assert cert.completion_slot is not None
+        assert cert.completion_slot < cert.n_slots
+        assert cert.wire_mb is not None and cert.wire_mb > 0
+        assert cert.max_link_flows is not None and cert.max_link_flows >= 1
+
+    def test_segmented_gets_per_segment_certificate(self):
+        spec = scenarios.get("segmented_sweep")
+        out = verify_scenario_plans(spec, mode="strict")
+        cert = out["certificates"][0]
+        assert cert.segment_completion is not None
+        assert sorted(cert.segment_completion) == list(
+            range(spec.n_segments))
+        for seg, slot in cert.segment_completion.items():
+            assert 0 <= slot < cert.n_slots
+        d = cert.to_dict()
+        assert d["segment_completion"] == {
+            str(k): v for k, v in cert.segment_completion.items()}
+
+    def test_flooding_skips_coloring_with_reasons(self):
+        out = verify_scenario_plans(scenarios.get("paper_flooding_baseline"),
+                                    mode="strict")
+        cert = out["certificates"][0]
+        for name in ("schedule/half-duplex", "schedule/color-discipline",
+                     "schedule/proper-coloring"):
+            assert name in cert.skipped
+        # but progress and conservation are still proven
+        assert "progress/completeness" in cert.invariants
+        assert "conservation/bytes-on-wire" in cert.invariants
+
+    def test_sweep_cells_verify(self):
+        cache = PlanCache()
+        for sweep_name in ("codec_x_protocol", "payload_latency_curve"):
+            for cell in scenarios.get_sweep(sweep_name).cells():
+                out = verify_scenario_plans(cell.spec, plan_cache=cache,
+                                            mode="strict")
+                assert out["ok"], (sweep_name, cell.coords)
+
+    def test_verified_stage_memoizes(self):
+        spec = scenarios.get("churn_storm")
+        cache = PlanCache()
+        out = verify_scenario_plans(spec, plan_cache=cache, mode="strict")
+        misses = cache.counters["verified_misses"]
+        assert misses == out["epochs"] > 1
+        assert cache.counters["verified_hits"] == 0
+        # second run: every epoch's certificate is a cache hit
+        verify_scenario_plans(spec, plan_cache=cache, mode="strict")
+        assert cache.counters["verified_misses"] == misses
+        assert cache.counters["verified_hits"] == misses
+
+    def test_sparse_planner_output_verifies(self):
+        g = make_topology(TopologySpec(kind="knn", n=400, seed=0, k=8,
+                                       n_subnets=4))
+        planner = SparsePlanner(g)
+        base = planner.plan(range(g.n))
+        members = sorted(set(range(g.n)) - {7, 99, 255})
+        patched = planner.replan(base, members)
+        for plan in (base, patched):
+            mst, colors = plan.member_mst()
+            policy = make_policy("mosgu_exchange", mst, mst=mst,
+                                 colors=colors)
+            cert = verify_policy(policy, payload_mb=1.0)
+            assert "schedule/proper-coloring" in cert.invariants
+            assert "progress/completeness" in cert.invariants
+
+    def test_optimizer_candidates_verify(self):
+        from repro.opt import SearchState
+        from repro.opt.search import _propose
+
+        g = make_topology(TopologySpec(kind="erdos_renyi", n=16, seed=2,
+                                       n_subnets=3))
+        state = SearchState(CSRGraph.from_dense(g), seed=0)
+        rng = np.random.default_rng(0)
+        verified = 0
+        for _ in range(30):
+            move = _propose(state, rng, None)
+            if move is None:
+                continue
+            _, rem, add = move
+            cand = state.try_edit(rem, add)
+            if cand is None:
+                continue
+            mst, colors = cand.plan.member_mst()
+            policy = make_policy("mosgu_exchange", mst, mst=mst,
+                                 colors=colors)
+            cert = verify_policy(policy, payload_mb=1.0)
+            assert "schedule/proper-coloring" in cert.invariants
+            state.commit(cand)
+            verified += 1
+        assert verified >= 3
+
+    def test_verify_result_accepts_executor_reports(self):
+        spec = scenarios.get("paper_table3")
+        for executor in ("plan", "engine", "netsim"):
+            result = run_scenario(spec, executor=executor)
+            assert verify_result(spec, result) == spec.rounds
+
+    def test_verify_result_accepts_event_accounting(self):
+        spec = scenarios.get("async_stragglers")
+        result = run_scenario(spec, executor="event")
+        assert verify_result(spec, result) == spec.rounds
+
+
+# ---------------------------------------------------------------------------
+# rejection: every invariant class, named precisely
+# ---------------------------------------------------------------------------
+
+
+class TestRejection:
+    def _verify(self, facts, **kw):
+        with pytest.raises(VerificationError) as err:
+            verify_facts(facts, **kw)
+        return err.value
+
+    def test_node_out_of_range(self):
+        facts = _hand_facts([_slot(0, [(0, 1, 0)])], [0, 1, 0])
+        facts.slots[0].dst[0] = 3  # n == 3
+        assert self._verify(facts).invariant == "structure/node-range"
+
+    def test_self_send(self):
+        facts = _hand_facts([_slot(0, [(0, 0, 0)])], [0, 1, 0])
+        assert self._verify(facts).invariant == "structure/node-range"
+
+    def test_edge_added_to_used_slot_not_in_graph(self):
+        # 0 -> 2 is not an edge of the 0-1-2 path
+        facts = _hand_facts([_slot(0, [(0, 1, 0), (0, 2, 0)])], [0, 1, 0])
+        err = self._verify(facts)
+        assert err.invariant == "structure/edges-in-graph"
+        assert "0 -> 2" in str(err)
+
+    def test_half_duplex_violation(self):
+        # node 1 receives from 0 and sends to 2 in the same colored slot
+        facts = _hand_facts([_slot(0, [(0, 1, 0), (1, 2, 1)])], [0, 0, 1])
+        err = self._verify(facts)
+        assert err.invariant == "schedule/half-duplex"
+        assert "node 1" in str(err)
+
+    def test_color_swapped_on_slot(self):
+        facts, *_ = _facts_for("paper_table3")
+        # relabel one colored slot to a *different* valid color: its
+        # senders no longer match the slot color
+        target = next(r for r in facts.slots if r.color >= 0 and len(r))
+        other = next(c for c in np.unique(facts.colors)
+                     if c >= 0 and c != target.color)
+        target.color = int(other)
+        assert self._verify(facts).invariant == "schedule/color-discipline"
+
+    def test_improper_coloring_of_used_edge(self):
+        # edge 0-1 is used while both endpoints hold color 0
+        facts = _hand_facts([_slot(0, [(0, 1, 0)])], [0, 0, 1])
+        assert self._verify(facts).invariant == "schedule/proper-coloring"
+
+    def test_duplicate_link_use_in_slot(self):
+        facts = _hand_facts([_slot(0, [(0, 1, 0), (0, 1, 1)])], [0, 1, 0])
+        err = self._verify(facts)
+        assert err.invariant == "schedule/degree-cap"
+        assert "0 -> 1" in str(err)
+
+    def test_capacity_dead_access_link(self):
+        facts, spec, members, _ = _facts_for("paper_table3")
+        net = as_compiled_network(_member_testbed(spec, members))
+        net.access_rate[:] = 0.0
+        err = self._verify(facts, network=net)
+        assert err.invariant == "capacity/admissible"
+
+    def test_capacity_dead_trunk(self):
+        facts, spec, members, _ = _facts_for("paper_table3")
+        net = as_compiled_network(_member_testbed(spec, members))
+        assert any(net.node_subnet[facts.slots[0].src]
+                   != net.node_subnet[facts.slots[0].dst]) or any(
+            any(net.node_subnet[r.src] != net.node_subnet[r.dst])
+            for r in facts.slots)
+        net.spec = dataclasses.replace(net.spec, trunk_mbps=0.0)
+        err = self._verify(facts, network=net)
+        assert err.invariant == "capacity/admissible"
+        assert "trunk" in str(err)
+
+    def test_send_before_possession(self):
+        # node 0 forwards node 2's payload at slot 0, before ever holding it
+        facts = _hand_facts([_slot(0, [(0, 1, 2)])], [0, 1, 0])
+        err = self._verify(facts)
+        assert err.invariant == "progress/causal-possession"
+        assert "payload 2" in str(err)
+
+    def test_dropped_send_breaks_completeness(self):
+        facts, *_ = _facts_for("paper_table3")
+        verify_facts(facts)  # sanity: intact plan passes
+        facts.slots = facts.slots[:-1]  # drop the final slot's deliveries
+        err = self._verify(facts)
+        assert err.invariant == "progress/completeness"
+        assert "never received" in str(err)
+
+    def test_exchange_wrong_payload(self):
+        facts, spec, members, cache = _facts_for("paper_table3")
+        pol = make_policy("mosgu_exchange",
+                          cache.subgraph(spec, members, lambda: None))
+        facts = PlanFacts.from_policy(pol)
+        rec = next(r for r in facts.slots if len(r))
+        rec.payload[0] = (rec.src[0] + 1) % facts.n  # not the sender's own
+        assert self._verify(facts).invariant == "progress/causal-possession"
+
+    def test_negative_staleness_window(self):
+        with pytest.raises(VerificationError) as err:
+            check_admission_schedule(5, -1)
+        assert err.value.invariant == "staleness/window-negative"
+
+    def test_admission_cycle_detected(self):
+        with pytest.raises(VerificationError) as err:
+            check_admission_acyclic(3, [(0, 2), (1, 0), (2, 1)])
+        assert err.value.invariant == "staleness/admission-acyclic"
+        check_admission_acyclic(3, [(1, 0), (2, 1)])  # a DAG is fine
+        check_admission_schedule(64, 3)  # any window >= 0 is acyclic
+
+    def test_conservation_counting_disagreement(self):
+        facts, *_ = _facts_for("paper_table3")
+        err = self._verify(
+            facts, payload_mb=1.0,
+            expected_stats={"n_slots": facts.n_slots,
+                            "transmissions": facts.transmissions + 1})
+        assert err.invariant == "conservation/bytes-on-wire"
+
+    def test_conservation_tampered_report(self):
+        spec = scenarios.get("paper_table3")
+        result = run_scenario(spec, executor="plan")
+        result.rounds[0].bytes_on_wire_mb *= 1.001
+        with pytest.raises(VerificationError) as err:
+            verify_result(spec, result)
+        assert err.value.invariant == "conservation/bytes-on-wire"
+
+    def test_rejection_covers_at_least_eight_classes(self):
+        # the acceptance criterion made executable: the tests above name
+        # at least 8 distinct invariant classes
+        named = {
+            "structure/node-range", "structure/edges-in-graph",
+            "schedule/half-duplex", "schedule/color-discipline",
+            "schedule/proper-coloring", "schedule/degree-cap",
+            "capacity/admissible", "progress/causal-possession",
+            "progress/completeness", "staleness/window-negative",
+            "staleness/admission-acyclic", "conservation/bytes-on-wire",
+        }
+        assert named <= set(INVARIANT_CLASSES)
+        assert len(named) >= 8
+
+
+# ---------------------------------------------------------------------------
+# wiring: runner modes, cache sharing, capability validation, CLI
+# ---------------------------------------------------------------------------
+
+
+class TestWiring:
+    def test_verify_off_and_strict_are_byte_identical(self):
+        spec = scenarios.get("paper_table3")
+        for executor in ("plan", "engine"):
+            off = run_scenario(spec, executor=executor, verify="off")
+            strict = run_scenario(spec, executor=executor, verify="strict")
+            assert off.to_dict() == strict.to_dict()
+
+    def test_verify_shares_the_cache_with_the_executor(self):
+        spec = scenarios.get("paper_table3")
+        cache = PlanCache()
+        run_scenario(spec, executor="plan", plan_cache=cache,
+                     verify="strict")
+        # the executor reused the policy the verifier built (one miss,
+        # at least one hit), and exactly one certificate was built
+        assert cache.counters["policy_misses"] == 1
+        assert cache.counters["policy_hits"] >= 1
+        assert cache.counters["verified_misses"] == 1
+
+    def test_unknown_verify_mode_rejected(self):
+        spec = scenarios.get("paper_table3")
+        with pytest.raises(ValueError, match="verify must be one of"):
+            run_scenario(spec, verify="paranoid")
+        with pytest.raises(ValueError, match="verify mode"):
+            verify_scenario_plans(spec, mode="off")
+
+    def test_warn_mode_downgrades_to_warning(self, monkeypatch):
+        import repro.verify as verify_mod
+
+        def boom(*a, **kw):
+            raise VerificationError("schedule/half-duplex", "injected")
+
+        monkeypatch.setattr(verify_mod, "_epoch_certificate", boom)
+        spec = scenarios.get("paper_table3")
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            out = verify_scenario_plans(spec, mode="warn")
+        assert not out["ok"]
+        assert out["invariant"] == "schedule/half-duplex"
+        assert any(issubclass(w.category, VerificationWarning)
+                   for w in caught)
+        # strict re-raises
+        with pytest.raises(VerificationError):
+            verify_scenario_plans(spec, mode="strict")
+        # and the runner's warn mode still executes the scenario
+        with warnings.catch_warnings(record=True):
+            warnings.simplefilter("always")
+            result = run_scenario(spec, executor="plan", verify="warn")
+        assert result.rounds
+
+    def test_spec_rejects_unknown_require_flag(self):
+        with pytest.raises(ValueError) as err:
+            ScenarioSpec(name="typo", require=("supports_stalenes",),
+                         rounds=1).validate()
+        assert "unknown capability 'supports_stalenes'" in str(err.value)
+        # the error names every known flag so the fix is self-serve
+        for flag in CAPABILITY_FLAGS:
+            assert flag in str(err.value)
+
+    def test_executor_rejects_unknown_require_flag(self):
+        # bypass spec validation (dataclasses.replace does not re-validate)
+        # to prove the executor-level guard holds on its own
+        spec = dataclasses.replace(scenarios.get("paper_table3"),
+                                   require=("provides_tmiing",))
+        with pytest.raises(ValueError, match="unknown capability"):
+            get_executor("plan").execute(spec)
+
+    def test_valid_require_still_enforced(self):
+        spec = scenarios.get("paper_table3").replace(
+            require=("supports_drops",))
+        with pytest.raises(ValueError, match="lacks capability"):
+            run_scenario(spec, executor="plan")
+        result = run_scenario(spec, executor="engine")
+        assert result.rounds
+
+    def test_cli_verifies_scenarios(self, capsys):
+        from repro.verify.__main__ import main
+
+        assert main(["--scenario", "paper_table3",
+                     "paper_flooding_baseline"]) == 0
+        out = capsys.readouterr().out
+        assert out.count("verified ✓") == 2
+        assert "plans verified: 2" in out
+
+    def test_cli_sweep_shares_plans(self, capsys):
+        from repro.verify.__main__ import main
+
+        assert main(["--sweep", "payload_latency_curve"]) == 0
+        out = capsys.readouterr().out
+        # 7 payload cells over one overlay: the plan is shared but the
+        # payloads differ, so each cell's conservation check is distinct
+        assert out.count("verified ✓") == 7
+
+    def test_obs_verify_track(self):
+        from repro import obs
+
+        spec = scenarios.get("paper_table3")
+        with obs.recording(obs.Recorder()) as rec:
+            verify_scenario_plans(spec, mode="strict")
+        trace = obs.chrome_trace(rec)
+        spans = [e for e in trace["traceEvents"]
+                 if e.get("ph") == "X" and e.get("cat") == "verify"]
+        assert spans, "verifier spans missing from the verify track"
+
+
+# ---------------------------------------------------------------------------
+# determinism lint
+# ---------------------------------------------------------------------------
+
+
+class TestLint:
+    def test_tree_is_clean_with_allowlist(self):
+        from repro.verify.lint import (
+            filter_allowed,
+            lint_tree,
+            load_allowlist,
+        )
+
+        allowlist = os.path.join(os.path.dirname(SRC_ROOT), "..", "tools",
+                                 "lint_allowlist.txt")
+        findings = filter_allowed(lint_tree(SRC_ROOT),
+                                  load_allowlist(allowlist))
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+    def test_allowlist_covers_only_obs_wall_clock(self):
+        from repro.verify.lint import lint_tree
+
+        raw = lint_tree(SRC_ROOT)
+        assert raw, "expected the two intentional obs wall-clock reads"
+        assert {(f.rule, f.path.rsplit("/", 1)[-1]) for f in raw} == {
+            ("wall-clock", "recorder.py")}
+
+    def _lint_source(self, tmp_path, source, rel="repro/somemod.py"):
+        from repro.verify.lint import lint_file
+
+        p = tmp_path / "fixture.py"
+        p.write_text(source)
+        return lint_file(str(p), rel)
+
+    def test_unseeded_numpy_rng_flagged(self, tmp_path):
+        findings = self._lint_source(
+            tmp_path,
+            "import numpy as np\n"
+            "x = np.random.rand(3)\n"
+            "rng = np.random.default_rng()\n"
+            "ok = np.random.default_rng(42)\n")
+        assert [f.rule for f in findings] == ["unseeded-rng"] * 2
+        assert {f.line for f in findings} == {2, 3}
+
+    def test_unseeded_stdlib_rng_flagged(self, tmp_path):
+        findings = self._lint_source(
+            tmp_path,
+            "import random\n"
+            "x = random.random()\n"
+            "r = random.Random()\n"
+            "ok = random.Random(7)\n")
+        assert [f.rule for f in findings] == ["unseeded-rng"] * 2
+
+    def test_wall_clock_only_in_virtual_modules(self, tmp_path):
+        src = "import time\nt = time.time()\np = time.perf_counter()\n"
+        flagged = self._lint_source(tmp_path, src, rel="repro/core/events.py")
+        assert [f.rule for f in flagged] == ["wall-clock"] * 2
+        # the same read outside a virtual-clock module is fine
+        assert self._lint_source(tmp_path, src, rel="repro/core/graph.py") \
+            == []
+
+    def test_dict_order_in_fingerprint_flagged(self, tmp_path):
+        findings = self._lint_source(
+            tmp_path,
+            "def thing_fingerprint(spec):\n"
+            "    out = [v for v in set(spec.values)]\n"
+            "    for k in spec.extras.keys():\n"
+            "        out.append(k)\n"
+            "    out += [v for v in sorted(set(spec.more))]\n"
+            "    return tuple(out)\n"
+            "def not_a_key_builder(spec):\n"
+            "    return list(set(spec.values))\n")
+        assert [f.rule for f in findings] == [
+            "dict-order-in-fingerprint"] * 2
+        assert {f.line for f in findings} == {2, 3}
+
+    def test_fingerprint_coverage_clean_and_detects_gaps(self, monkeypatch):
+        from repro.verify import lint as lint_mod
+
+        assert lint_mod.check_fingerprint_coverage(SRC_ROOT) == []
+        # an unclassified ScenarioSpec field must surface
+        trimmed = {k: v for k, v in lint_mod.SPEC_FIELD_ROLES.items()
+                   if k != "codec"}
+        monkeypatch.setattr(lint_mod, "SPEC_FIELD_ROLES", trimmed)
+        findings = lint_mod.check_fingerprint_coverage(SRC_ROOT)
+        assert any("codec" in f.detail and f.rule == "fingerprint-coverage"
+                   for f in findings)
+
+    def test_cli_lint_clean(self, capsys):
+        import tools.lint  # noqa: F401  # ensures the module imports
+
+        from tools.lint import main
+
+        assert main([]) == 0
+        assert "lint: clean" in capsys.readouterr().out

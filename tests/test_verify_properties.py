@@ -1,0 +1,182 @@
+"""Property-based verifier contracts (requires the optional ``hypothesis``
+dev extra; skipped cleanly when absent — ``tests/test_verify.py`` carries
+the deterministic acceptance/rejection coverage).
+
+Three families over randomly drawn topologies and protocols:
+
+* **soundness of acceptance** — any plan the verifier certifies runs to
+  completion (deadlock-free) on the real executors, and the counting,
+  engine and netsim executors agree byte-for-byte on what it moved.
+* **completeness of rejection** — canonical mutations of a certified
+  plan (edge added to a used slot, slot color swapped, sends dropped)
+  are always rejected, and with the *precise* invariant class named.
+* **abstract-interpretation agreement** — the possession-lattice
+  completion slot the certificate proves matches the executor's actual
+  dissemination behaviour.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional dev extra")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.core.graph import TopologySpec, make_topology  # noqa: E402
+from repro.core.plan import make_policy  # noqa: E402
+from repro.scenario import run_scenario  # noqa: E402
+from repro.scenario.spec import ScenarioSpec  # noqa: E402
+from repro.verify import (  # noqa: E402
+    PlanFacts,
+    VerificationError,
+    verify_facts,
+    verify_policy,
+    verify_scenario_plans,
+)
+
+PROTOCOLS = ("dissemination", "mosgu", "mosgu_exchange", "flooding")
+
+
+@st.composite
+def overlays(draw):
+    """Connected dense overlays, n in [8, 20]."""
+    n = draw(st.integers(min_value=8, max_value=20))
+    seed = draw(st.integers(min_value=0, max_value=2**16))
+    kind = draw(st.sampled_from(("erdos_renyi", "watts_strogatz",
+                                 "barabasi_albert")))
+    spec = TopologySpec(kind=kind, n=n, seed=seed, p=0.45,
+                        n_subnets=draw(st.integers(2, 4)))
+    g = make_topology(spec)
+    assume(g.is_connected())
+    return spec, g
+
+
+@st.composite
+def scenario_specs(draw):
+    topo, _ = draw(overlays())
+    protocol = draw(st.sampled_from(PROTOCOLS))
+    return ScenarioSpec(
+        name="prop",
+        overlay=topo,
+        protocol=protocol,
+        payload=draw(st.sampled_from((0.5, 1.0, 21.2))),
+        rounds=draw(st.integers(min_value=1, max_value=3)),
+    )
+
+
+@st.composite
+def certified_facts(draw):
+    """PlanFacts for a policy the verifier accepts."""
+    _, g = draw(overlays())
+    protocol = draw(st.sampled_from(PROTOCOLS))
+    policy = make_policy(protocol, g)
+    facts = PlanFacts.from_policy(policy)
+    verify_facts(facts)  # certified before we mutate
+    return facts
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=scenario_specs())
+def test_accepted_plans_run_and_executors_agree(spec):
+    out = verify_scenario_plans(spec, mode="strict")
+    assert out["ok"]
+    results = {ex: run_scenario(spec, executor=ex)
+               for ex in ("plan", "engine", "netsim")}
+    for ex, result in results.items():
+        assert len(result.rounds) == spec.rounds, ex  # deadlock-free
+    base = results["plan"]
+    for ex in ("engine", "netsim"):
+        for r0, r1 in zip(base.rounds, results[ex].rounds):
+            assert r0.transmissions == r1.transmissions, ex
+            assert np.isclose(r0.bytes_on_wire_mb, r1.bytes_on_wire_mb,
+                              rtol=1e-9), ex
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=scenario_specs())
+def test_verify_strict_is_invisible_to_results(spec):
+    off = run_scenario(spec, executor="plan", verify="off")
+    strict = run_scenario(spec, executor="plan", verify="strict")
+    assert off.to_dict() == strict.to_dict()
+
+
+@settings(max_examples=25, deadline=None)
+@given(facts=certified_facts(), data=st.data())
+def test_edge_added_to_used_slot_rejected(facts, data):
+    # splice a send over a *non-edge* into a used slot
+    used = [i for i, rec in enumerate(facts.slots) if len(rec)]
+    idx = data.draw(st.sampled_from(used))
+    adj = facts.graph.adj
+    free = np.argwhere(adj == 0)
+    free = free[free[:, 0] != free[:, 1]]
+    assume(len(free))
+    src, dst = free[data.draw(st.integers(0, len(free) - 1))]
+    rec = facts.slots[idx]
+    rec.src = np.append(rec.src, src)
+    rec.dst = np.append(rec.dst, dst)
+    rec.payload = np.append(rec.payload, src % facts.n_payloads)
+    with pytest.raises(VerificationError) as err:
+        verify_facts(facts)
+    # the non-edge itself is the first structural failure; a mutation that
+    # also collides on schedule invariants may trip those first
+    assert err.value.invariant in ("structure/edges-in-graph",
+                                   "schedule/half-duplex",
+                                   "progress/causal-possession")
+
+
+@settings(max_examples=25, deadline=None)
+@given(facts=certified_facts(), data=st.data())
+def test_swapped_slot_color_rejected(facts, data):
+    colored = [i for i, rec in enumerate(facts.slots)
+               if rec.color >= 0 and len(rec)]
+    assume(colored)
+    idx = data.draw(st.sampled_from(colored))
+    palette = sorted(c for c in np.unique(facts.colors) if c >= 0)
+    assume(len(palette) > 1)
+    old = facts.slots[idx].color
+    facts.slots[idx].color = data.draw(
+        st.sampled_from([c for c in palette if c != old]))
+    with pytest.raises(VerificationError) as err:
+        verify_facts(facts)
+    assert err.value.invariant == "schedule/color-discipline"
+
+
+@settings(max_examples=25, deadline=None)
+@given(facts=certified_facts(), data=st.data())
+def test_dropped_sends_rejected(facts, data):
+    # drop a whole suffix of slots: some deliveries never happen
+    cut = data.draw(st.integers(1, max(1, len(facts.slots) - 1)))
+    facts.slots = facts.slots[:-cut]
+    with pytest.raises(VerificationError) as err:
+        verify_facts(facts)
+    assert err.value.invariant == "progress/completeness"
+
+
+@settings(max_examples=15, deadline=None)
+@given(overlay=overlays())
+def test_completion_slot_matches_executor_dissemination(overlay):
+    topo, g = overlay
+    policy = make_policy("dissemination", g)
+    cert = verify_policy(policy, payload_mb=1.0)
+    assert cert.completion_slot is not None
+    # the lattice proof says nothing is complete before completion_slot:
+    # truncating the plan there must fail
+    facts = PlanFacts.from_policy(make_policy("dissemination", g))
+    facts.slots = facts.slots[:cert.completion_slot]
+    with pytest.raises(VerificationError) as err:
+        verify_facts(facts)
+    assert err.value.invariant == "progress/completeness"
+
+
+@settings(max_examples=15, deadline=None)
+@given(overlay=overlays(), staleness=st.integers(0, 8),
+       rounds=st.integers(1, 12))
+def test_any_nonnegative_staleness_window_is_acyclic(overlay, staleness,
+                                                     rounds):
+    from repro.verify import check_admission_schedule
+
+    check_admission_schedule(rounds, staleness)  # must not raise
+    with pytest.raises(VerificationError) as err:
+        check_admission_schedule(rounds, -1 - staleness)
+    assert err.value.invariant == "staleness/window-negative"

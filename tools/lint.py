@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Determinism lint CLI (rules in :mod:`repro.verify.lint`).
+
+Usage (from the repo root)::
+
+  PYTHONPATH=src python tools/lint.py                 # lint src/repro/
+  PYTHONPATH=src python tools/lint.py --root src/repro/core
+  PYTHONPATH=src python tools/lint.py --no-allowlist  # show everything
+
+Exit status 1 when any unsuppressed finding remains — CI runs this over
+the tree and keeps it at zero. Intentional exceptions (the obs recorder's
+wall-clock span timestamps) live in ``tools/lint_allowlist.txt``, one
+reviewed line each.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.verify.lint import (  # noqa: E402
+    filter_allowed,
+    lint_tree,
+    load_allowlist,
+)
+
+DEFAULT_ROOT = os.path.join(REPO, "src", "repro")
+DEFAULT_ALLOWLIST = os.path.join(HERE, "lint_allowlist.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint.py", description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=DEFAULT_ROOT,
+                    help="tree to lint (default: src/repro)")
+    ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
+                    help="allowlist file (default: tools/lint_allowlist.txt)")
+    ap.add_argument("--no-allowlist", action="store_true",
+                    help="report findings the allowlist would suppress")
+    args = ap.parse_args(argv)
+
+    findings = lint_tree(args.root)
+    n_raw = len(findings)
+    if not args.no_allowlist and os.path.exists(args.allowlist):
+        findings = filter_allowed(findings, load_allowlist(args.allowlist))
+    for f in findings:
+        print(f)
+    suppressed = n_raw - len(findings)
+    tail = f" ({suppressed} allowlisted)" if suppressed else ""
+    if findings:
+        print(f"\nlint: {len(findings)} finding(s){tail}", file=sys.stderr)
+        return 1
+    print(f"lint: clean over {args.root}{tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
